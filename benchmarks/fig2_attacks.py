@@ -1,0 +1,43 @@
+"""Figure 2 reproduction: accuracy of each aggregation rule under the four
+attacks (+ Mean-without-Byzantine reference).  CSV: results/fig2.csv."""
+from __future__ import annotations
+
+import argparse
+import csv
+import os
+
+from benchmarks.common import ATTACKS, RULES, ExpConfig, run_experiment
+
+
+def main(full: bool = False, model: str = "mlp",
+         out: str = "results/fig2.csv") -> list:
+    cfg = ExpConfig.paper_scale() if full else ExpConfig()
+    cfg.model = model
+    rows = []
+    # reference: averaging without Byzantine failures
+    ref = run_experiment("mean", "none", cfg)
+    rows.append({"attack": "none", "rule": "mean_no_byz",
+                 "final_acc": ref["final_acc"], "max_acc": ref["max_acc"]})
+    for attack in ("gaussian", "omniscient", "bitflip", "gambler"):
+        for rule in RULES:
+            b = 8 if attack in ("bitflip", "gambler") else 6
+            r = run_experiment(rule, attack, cfg, b=b)
+            rows.append({"attack": attack, "rule": rule,
+                         "final_acc": r["final_acc"],
+                         "max_acc": r["max_acc"]})
+            print(f"fig2 {attack:10s} {rule:10s} final={r['final_acc']:.4f} "
+                  f"max={r['max_acc']:.4f}", flush=True)
+    os.makedirs(os.path.dirname(out), exist_ok=True)
+    with open(out, "w", newline="") as f:
+        w = csv.DictWriter(f, fieldnames=rows[0].keys())
+        w.writeheader()
+        w.writerows(rows)
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--model", default="mlp", choices=["mlp", "cnn"])
+    args = ap.parse_args()
+    main(full=args.full, model=args.model)

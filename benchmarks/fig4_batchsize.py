@@ -1,0 +1,36 @@
+"""Figure 4 reproduction: no-failure convergence when batch size varies,
+lr = 0.1·batchsize/32.  CSV: results/fig4.csv."""
+from __future__ import annotations
+
+import argparse
+import csv
+import os
+
+from benchmarks.common import ExpConfig, run_experiment
+
+
+def main(full: bool = False, out: str = "results/fig4.csv") -> list:
+    rows = []
+    for bs in (8, 32, 128):
+        cfg = ExpConfig.paper_scale() if full else ExpConfig()
+        cfg.batch_per_worker = bs
+        cfg.lr = 0.1 * bs / 32.0
+        for rule in ("mean", "trmean", "phocas", "krum"):
+            r = run_experiment(rule, "none", cfg, b=6)
+            rows.append({"batch": bs, "rule": rule,
+                         "final_acc": r["final_acc"],
+                         "max_acc": r["max_acc"]})
+            print(f"fig4 bs={bs:4d} {rule:8s} final={r['final_acc']:.4f}",
+                  flush=True)
+    os.makedirs(os.path.dirname(out), exist_ok=True)
+    with open(out, "w", newline="") as f:
+        w = csv.DictWriter(f, fieldnames=rows[0].keys())
+        w.writeheader()
+        w.writerows(rows)
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    main(full=ap.parse_args().full)

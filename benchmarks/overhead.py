@@ -1,0 +1,62 @@
+"""Robustness overhead at transformer scale: wall-time of the full robust
+train step per aggregation rule (reduced gemma2, m=8 workers, CPU).
+
+Complements §4.4's complexity table: what does dimensional robustness cost
+end-to-end, relative to plain averaging?  CSV: results/overhead.csv."""
+from __future__ import annotations
+
+import csv
+import os
+import time
+
+import jax
+
+from repro.configs import get_arch
+from repro.core import RobustConfig
+from repro.data import TokenStream, make_worker_batches
+from repro.models import build_model
+from repro.optim import OptConfig, init_opt_state
+from repro.train import make_train_step
+
+M = 8
+
+
+def main(out: str = "results/overhead.csv", reps: int = 3):
+    cfg = get_arch("gemma2-2b-reduced")
+    model = build_model(cfg)
+    key = jax.random.PRNGKey(0)
+    params = model.init(key)
+    opt_cfg = OptConfig(name="sgd", lr=0.1)
+    ds = TokenStream(vocab_size=cfg.vocab_size, seq_len=64, global_batch=2 * M)
+    batch = make_worker_batches(ds.batch(0), M)
+    rows = []
+    base_us = None
+    for rule, b in (("mean", 0), ("trmean", 2), ("phocas", 2), ("krum", 2),
+                    ("multikrum", 2), ("median", 0), ("geomedian", 0)):
+        rob = RobustConfig(rule=rule, b=b, q=max(b, 1))
+        step = make_train_step(model, robust_cfg=rob, opt_cfg=opt_cfg,
+                               num_workers=M, mesh=None, donate=False)
+        opt_state = init_opt_state(opt_cfg, params)
+        p, o, _ = step(params, opt_state, batch, key)      # compile + warm
+        jax.block_until_ready(jax.tree.leaves(p)[0])
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            p, o, _ = step(params, opt_state, batch, key)
+        jax.block_until_ready(jax.tree.leaves(p)[0])
+        us = (time.perf_counter() - t0) / reps * 1e6
+        if rule == "mean":
+            base_us = us
+        rows.append({"rule": rule, "us_per_step": us,
+                     "overhead_vs_mean": us / base_us})
+        print(f"overhead {rule:10s} {us:12,.0f} us/step "
+              f"({us / base_us:.2f}x mean)", flush=True)
+    os.makedirs(os.path.dirname(out), exist_ok=True)
+    with open(out, "w", newline="") as f:
+        w = csv.DictWriter(f, fieldnames=rows[0].keys())
+        w.writeheader()
+        w.writerows(rows)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,95 @@
+"""Benchmark entry point: one function per paper table/figure.
+Prints ``name,us_per_call,derived`` CSV lines.
+
+  python -m benchmarks.run [--full] [--only fig2,roofline,...]
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+
+def _run(name, fn, rows_to_csv):
+    t0 = time.time()
+    rows = fn()
+    us = (time.time() - t0) * 1e6
+    for line in rows_to_csv(rows):
+        print(line, flush=True)
+    print(f"{name},{us:.0f},done", flush=True)
+    return rows
+
+
+def main(full: bool = False, only: str = "") -> None:
+    sel = set(only.split(",")) if only else None
+    pick = lambda n: sel is None or n in sel
+
+    if pick("complexity"):
+        from benchmarks.table_complexity import main as f
+        _run("table_complexity", lambda: f(full=full),
+             lambda rows: [
+                 f"complexity/{r['rule']}/m{r['m']}/d{r['d']},"
+                 f"{r['us_per_call']:.0f},us_per_call" for r in rows])
+
+    if pick("bounds"):
+        from benchmarks.bounds_check import main as f
+        _run("bounds_check", lambda: f(trials=50 if not full else 200),
+             lambda rows: [
+                 f"bounds/{r['rule']}/q{r['q']}/b{r['b']},0,"
+                 f"emp={r['empirical_mse']:.2f};delta={r['delta_bound']:.2f};"
+                 f"holds={r['holds']}" for r in rows])
+
+    if pick("fig2"):
+        from benchmarks.fig2_attacks import main as f
+        _run("fig2_attacks", lambda: f(full=full),
+             lambda rows: [
+                 f"fig2/{r['attack']}/{r['rule']},0,"
+                 f"final_acc={r['final_acc']:.4f};max_acc={r['max_acc']:.4f}"
+                 for r in rows])
+
+    if pick("fig3"):
+        from benchmarks.fig3_sensitivity import main as f
+        _run("fig3_sensitivity", lambda: f(full=full),
+             lambda rows: [
+                 f"fig3/{r['panel']}/{r['rule']}/b{r['b_or_q']},0,"
+                 f"final_acc={r['final_acc']:.4f}" for r in rows])
+
+    if pick("fig4"):
+        from benchmarks.fig4_batchsize import main as f
+        _run("fig4_batchsize", lambda: f(full=full),
+             lambda rows: [
+                 f"fig4/bs{r['batch']}/{r['rule']},0,"
+                 f"final_acc={r['final_acc']:.4f}" for r in rows])
+
+    if pick("survival"):
+        from benchmarks.survival import main as f
+        _run("survival", lambda: f(),
+             lambda rows: [
+                 f"survival/ds{r['d_server']}/p{r['p']}/b{r['b_or_q']},0,"
+                 f"dim={r['P_crash_dimensional']:.3e};"
+                 f"classic={r['P_crash_classic']:.3e}" for r in rows])
+
+    if pick("overhead"):
+        from benchmarks.overhead import main as f
+        _run("overhead", lambda: f(),
+             lambda rows: [
+                 f"overhead/{r['rule']},{r['us_per_step']:.0f},"
+                 f"x_mean={r['overhead_vs_mean']:.2f}" for r in rows])
+
+    if pick("roofline"):
+        from benchmarks.roofline import main as f
+        _run("roofline", lambda: f(markdown=False),
+             lambda rows: [
+                 f"roofline/{r['arch']}/{r['shape']}/{r['mesh']}/{r['layout']},0,"
+                 f"compute={r['compute_s']:.3f}s;memory={r['memory_s']:.3f}s;"
+                 f"collective={r['collective_s']:.3f}s;dom={r['dominant']};"
+                 f"useful={r['useful_ratio']:.2f}" for r in rows])
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale rounds (slow)")
+    ap.add_argument("--only", default="",
+                    help="comma-separated subset, e.g. fig2,roofline")
+    args = ap.parse_args()
+    main(full=args.full, only=args.only)

@@ -1,0 +1,63 @@
+"""§4.4 time-complexity table: µs per aggregation call vs (m, d) for every
+rule — empirically confirms Trmean/Phocas ≈ O(dm) vs Krum O(dm²).
+CSV: results/table_complexity.csv."""
+from __future__ import annotations
+
+import argparse
+import csv
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import aggregators as agg
+from repro.kernels import ops as kops
+
+
+def _timeit(fn, u, reps=5) -> float:
+    out = fn(u)
+    jax.block_until_ready(out)                 # compile + warm
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(u)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def main(out: str = "results/table_complexity.csv", full: bool = False):
+    sizes = [(10, 100_000), (20, 100_000), (40, 100_000), (20, 1_000_000)]
+    if full:
+        sizes += [(80, 100_000), (20, 10_000_000)]
+    rules = {
+        "mean": lambda u: agg.mean(u),
+        "median": lambda u: agg.median(u),
+        "trmean_b4": jax.jit(lambda u: agg.trmean(u, 4)),
+        "phocas_b4": jax.jit(lambda u: agg.phocas(u, 4)),
+        "trmean_kernel": lambda u: kops.trmean(u, 4),
+        "phocas_kernel": lambda u: kops.phocas(u, 4),
+        "krum_q4": jax.jit(lambda u: agg.krum(u, 4)),
+        "multikrum_q4": jax.jit(lambda u: agg.multikrum(u, 4)),
+        "geomedian": jax.jit(agg.geomedian),
+    }
+    rows = []
+    key = jax.random.PRNGKey(0)
+    for m, d in sizes:
+        u = jax.random.normal(key, (m, d), jnp.float32)
+        for name, fn in rules.items():
+            us = _timeit(fn, u)
+            rows.append({"m": m, "d": d, "rule": name, "us_per_call": us})
+            print(f"complexity m={m:3d} d={d:9,d} {name:14s} "
+                  f"{us:12,.0f} us", flush=True)
+    os.makedirs(os.path.dirname(out), exist_ok=True)
+    with open(out, "w", newline="") as f:
+        w = csv.DictWriter(f, fieldnames=rows[0].keys())
+        w.writeheader()
+        w.writerows(rows)
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    main(full=ap.parse_args().full)

@@ -1,0 +1,32 @@
+"""Quickstart: the paper's contribution in 40 lines.
+
+Robust aggregation of worker gradients under a dimensional Byzantine attack:
+averaging breaks, Phocas doesn't.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.core import AttackConfig, RobustConfig, aggregate_matrix
+
+key = jax.random.PRNGKey(0)
+m, d = 20, 10_000                       # 20 workers, 10k-dim gradient
+
+# Correct gradients: i.i.d. around the true gradient g = 1.0
+g = jnp.ones((d,))
+grads = g[None] + 0.1 * jax.random.normal(key, (m, d))
+
+# Bit-flip attack (paper §5.1.3): 1 of the 20 values corrupted in each of
+# the first 1000 dimensions — EVERY worker row is partially Byzantine, so
+# classic (row-wise) defenses like Krum cannot help.
+attack = AttackConfig(name="bitflip", num_byzantine=1, bitflip_dims=1000)
+
+for rule, b in (("mean", 0), ("krum", 0), ("trmean", 2), ("phocas", 2)):
+    cfg = RobustConfig(rule=rule, b=b, q=max(b, 1), attack=attack)
+    agg = aggregate_matrix(grads, cfg, key=key)
+    err = float(jnp.linalg.norm(agg - g) / jnp.linalg.norm(g))
+    print(f"{rule:8s} (b={b}):  relative aggregation error = {err:10.3e}")
+
+print("\nMean/Krum are destroyed by per-dimension corruption;"
+      "\nTrmean/Phocas (dimensional Byzantine-resilient) are unaffected.")

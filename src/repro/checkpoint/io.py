@@ -1,0 +1,61 @@
+"""Pytree checkpointing: flattened-path .npz + structure manifest (no orbax).
+
+Dtypes (incl. bfloat16, stored as uint16 bit patterns) and the tree structure
+round-trip exactly.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _flatten(tree) -> dict:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        flat[key] = leaf
+    return flat
+
+
+def save_checkpoint(path: str, tree: Any, *, step: int = 0) -> None:
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    flat = _flatten(tree)
+    arrays, meta = {}, {"step": step, "dtypes": {}, "keys": []}
+    for k, v in flat.items():
+        arr = np.asarray(v)
+        meta["dtypes"][k] = str(arr.dtype)
+        meta["keys"].append(k)
+        if arr.dtype == jnp.bfloat16:
+            arr = arr.view(np.uint16)
+            meta["dtypes"][k] = "bfloat16"
+        arrays[k] = arr
+    np.savez(path + ".npz", **arrays)
+    with open(path + ".json", "w") as f:
+        json.dump(meta, f)
+
+
+def load_checkpoint(path: str, like: Any):
+    """Restore into the structure of ``like`` (a pytree of arrays or
+    ShapeDtypeStructs).  Returns (tree, step)."""
+    with open(path + ".json") as f:
+        meta = json.load(f)
+    data = np.load(path + ".npz")
+    flat_like = _flatten(like)
+    out = {}
+    for k in flat_like:
+        arr = data[k]
+        if meta["dtypes"][k] == "bfloat16":
+            arr = arr.view(jnp.bfloat16)
+        out[k] = jnp.asarray(arr)
+    leaves_like, treedef = jax.tree_util.tree_flatten(like)
+    keys = [  # rebuild in like's flatten order
+        "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        for path, _ in jax.tree_util.tree_flatten_with_path(like)[0]]
+    return (jax.tree_util.tree_unflatten(treedef, [out[k] for k in keys]),
+            meta["step"])

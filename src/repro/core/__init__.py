@@ -1,0 +1,12 @@
+"""Core library: the paper's contribution (robust aggregation) as composable
+JAX modules."""
+from repro.core.aggregators import (  # noqa: F401
+    mean, median, trmean, phocas, krum, multikrum, geomedian, krum_scores,
+    get_aggregator, COORDINATE_WISE, VECTOR_WISE,
+)
+from repro.core.attacks import AttackConfig, make_attack  # noqa: F401
+from repro.core.robust import (  # noqa: F401
+    RobustConfig, aggregate_matrix, aggregate_stacked_tree,
+    robust_aggregate_dist,
+)
+from repro.core import bounds  # noqa: F401

@@ -1,0 +1,162 @@
+"""Robust gradient aggregation rules (the paper's core contribution).
+
+Every rule consumes a worker-gradient matrix ``u`` of shape ``(m, d)`` (m
+workers along axis 0) and returns the aggregated ``(d,)`` vector.  All rules
+are pure ``jnp`` and jit/shard_map friendly; the coordinate-wise rules
+(``trmean``, ``phocas``, ``median``, ``mean``) broadcast over any trailing
+shape, so they can be applied directly to ``(m, *leaf_shape)`` pytree leaves.
+
+Definitions follow the paper:
+
+* ``trmean``  — Definition 7, b-trimmed coordinate-wise mean.
+* ``phocas``  — Definition 8, mean of the (m-b) values nearest to the
+  b-trimmed mean, per coordinate.
+* ``krum`` / ``multikrum`` — Definition 3 / Blanchard et al. baselines.
+* ``mean`` / ``median`` / ``geomedian`` — non-robust / Yin-et-al-family
+  baselines.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, Dict
+
+import jax
+import jax.numpy as jnp
+
+Aggregator = Callable[..., jax.Array]
+
+
+def _as_f32(u: jax.Array) -> jax.Array:
+    return u.astype(jnp.float32) if u.dtype != jnp.float32 else u
+
+
+# ---------------------------------------------------------------------------
+# Coordinate-wise rules
+# ---------------------------------------------------------------------------
+
+def mean(u: jax.Array) -> jax.Array:
+    """Plain averaging — the non-robust default (Proposition 1: NOT resilient)."""
+    return jnp.mean(_as_f32(u), axis=0)
+
+
+def median(u: jax.Array) -> jax.Array:
+    """Coordinate-wise median (= trmean with maximal b for odd m)."""
+    return jnp.median(_as_f32(u), axis=0)
+
+
+def trmean(u: jax.Array, b: int) -> jax.Array:
+    """Coordinate-wise b-trimmed mean (Definition 7).
+
+    Sorts each coordinate over the worker axis and averages the middle
+    ``m - 2b`` order statistics.
+    """
+    m = u.shape[0]
+    if not 0 <= b <= (m + 1) // 2 - 1:
+        raise ValueError(f"b={b} out of range [0, ceil(m/2)-1] for m={m}")
+    s = jnp.sort(_as_f32(u), axis=0)
+    if b == 0:
+        return jnp.mean(s, axis=0)
+    return jnp.mean(s[b : m - b], axis=0)
+
+
+def phocas(u: jax.Array, b: int) -> jax.Array:
+    """Phocas (Definition 8): average of the (m-b) values nearest to the
+    b-trimmed mean, per coordinate."""
+    m = u.shape[0]
+    uf = _as_f32(u)
+    center = trmean(uf, b)
+    if b == 0:
+        return mean(uf)
+    dist = jnp.abs(uf - center[None])
+    # Keep the (m-b) nearest == drop the b farthest.  Implemented as a
+    # top-k free masked sum: sort distances, threshold at the (m-b)-th.
+    order = jnp.argsort(dist, axis=0)  # ascending distance
+    ranks = jnp.argsort(order, axis=0)  # rank of each entry per coordinate
+    keep = (ranks < (m - b)).astype(uf.dtype)
+    return jnp.sum(uf * keep, axis=0) / (m - b)
+
+
+# ---------------------------------------------------------------------------
+# Vector-wise (classic) rules — Krum family
+# ---------------------------------------------------------------------------
+
+def _pairwise_sq_dists(u: jax.Array) -> jax.Array:
+    """(m, m) squared Euclidean distances via the Gram matrix (MXU friendly)."""
+    uf = _as_f32(u.reshape(u.shape[0], -1))
+    sq = jnp.sum(uf * uf, axis=1)
+    gram = uf @ uf.T
+    d2 = sq[:, None] + sq[None, :] - 2.0 * gram
+    return jnp.maximum(d2, 0.0)
+
+
+def krum_scores(u: jax.Array, q: int) -> jax.Array:
+    """Per-worker Krum score: sum of sq-distances to the m-q-2 nearest others."""
+    m = u.shape[0]
+    k = m - q - 2
+    if k <= 0:
+        raise ValueError(f"Krum requires m - q - 2 > 0 (m={m}, q={q})")
+    d2 = _pairwise_sq_dists(u)
+    d2 = d2 + jnp.diag(jnp.full((m,), jnp.inf, d2.dtype))  # exclude self
+    nearest = jnp.sort(d2, axis=1)[:, :k]
+    return jnp.sum(nearest, axis=1)
+
+
+def krum(u: jax.Array, q: int) -> jax.Array:
+    """Krum (Definition 3): the candidate with minimal score.
+
+    NOT dimensional-Byzantine resilient (Proposition 3) — baseline only.
+    """
+    scores = krum_scores(u, q)
+    idx = jnp.argmin(scores)
+    return _as_f32(u.reshape(u.shape[0], -1))[idx].reshape(u.shape[1:])
+
+
+def multikrum(u: jax.Array, q: int, k: int | None = None) -> jax.Array:
+    """Multi-Krum: average the k lowest-score candidates (Blanchard et al.)."""
+    m = u.shape[0]
+    if k is None:
+        k = m - q - 2
+    scores = krum_scores(u, q)
+    _, idx = jax.lax.top_k(-scores, k)
+    flat = _as_f32(u.reshape(m, -1))
+    return jnp.mean(flat[idx], axis=0).reshape(u.shape[1:])
+
+
+def geomedian(u: jax.Array, iters: int = 8, eps: float = 1e-8) -> jax.Array:
+    """Geometric median via Weiszfeld iterations (Chen et al. family baseline)."""
+    uf = _as_f32(u.reshape(u.shape[0], -1))
+
+    def step(z, _):
+        w = 1.0 / jnp.maximum(jnp.linalg.norm(uf - z[None], axis=1), eps)
+        z_new = jnp.sum(uf * w[:, None], axis=0) / jnp.sum(w)
+        return z_new, None
+
+    z0 = jnp.mean(uf, axis=0)
+    z, _ = jax.lax.scan(step, z0, None, length=iters)
+    return z.reshape(u.shape[1:])
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+def get_aggregator(name: str, *, b: int = 0, q: int = 0,
+                   multikrum_k: int | None = None) -> Aggregator:
+    """Return a unary ``(m, ...) -> (...)`` aggregation closure by name."""
+    name = name.lower()
+    table: Dict[str, Aggregator] = {
+        "mean": mean,
+        "median": median,
+        "trmean": functools.partial(trmean, b=b),
+        "phocas": functools.partial(phocas, b=b),
+        "krum": functools.partial(krum, q=q),
+        "multikrum": functools.partial(multikrum, q=q, k=multikrum_k),
+        "geomedian": geomedian,
+    }
+    if name not in table:
+        raise ValueError(f"unknown aggregator {name!r}; have {sorted(table)}")
+    return table[name]
+
+
+COORDINATE_WISE = frozenset({"mean", "median", "trmean", "phocas"})
+VECTOR_WISE = frozenset({"krum", "multikrum", "geomedian"})

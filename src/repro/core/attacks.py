@@ -1,0 +1,150 @@
+"""Byzantine attack suite (paper §5 + beyond-paper extensions).
+
+Every attack is a pure function ``(key, u) -> u_tilde`` over the worker-
+gradient matrix ``u`` of shape ``(m, d)`` (f32).  Attacks are injected
+*after* per-worker gradient computation and *before* aggregation — the same
+point in the pipeline where the paper's transmission-medium corruption lands.
+
+Classic attacks corrupt whole rows (workers); dimensional attacks corrupt
+individual coordinates anywhere in the matrix (Definition 4).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+Attack = Callable[[jax.Array, jax.Array], jax.Array]  # (key, u) -> u_tilde
+
+
+@dataclasses.dataclass(frozen=True)
+class AttackConfig:
+    """Configuration of the injected failure model."""
+    name: str = "none"                 # attack kind
+    num_byzantine: int = 0             # q: rows (classic) / values per dim (dimensional)
+    gaussian_std: float = 200.0        # paper: std 200
+    omniscient_scale: float = 1e20     # paper: 1e20
+    bitflip_dims: int = 1000           # paper: first 1000 dimensions
+    bitflip_bits: tuple = (22, 30, 31, 32)  # paper: 22th,30th,31th,32th bits (1-indexed)
+    gambler_servers: int = 20          # paper: 20 servers
+    gambler_prob: float = 0.0005       # paper: 0.05%
+    gambler_scale: float = -1e20
+
+
+# ---------------------------------------------------------------------------
+# Classic (row-wise) attacks
+# ---------------------------------------------------------------------------
+
+def gaussian_attack(key: jax.Array, u: jax.Array, q: int,
+                    std: float = 200.0) -> jax.Array:
+    """Replace the first q rows with N(0, std²) noise (§5.1.1)."""
+    m, d = u.shape
+    noise = std * jax.random.normal(key, (q, d), u.dtype)
+    return u.at[:q].set(noise)
+
+
+def omniscient_attack(key: jax.Array, u: jax.Array, q: int,
+                      scale: float = 1e20) -> jax.Array:
+    """Replace the first q rows with -scale * sum(correct grads) (§5.1.2)."""
+    del key
+    correct_sum = jnp.sum(u[q:], axis=0, keepdims=True)
+    byz = -scale * correct_sum
+    return u.at[:q].set(jnp.broadcast_to(byz, (q, u.shape[1])))
+
+
+def signflip_attack(key: jax.Array, u: jax.Array, q: int,
+                    scale: float = 10.0) -> jax.Array:
+    """Beyond-paper: first q rows flipped in sign and scaled."""
+    del key
+    return u.at[:q].set(-scale * u[:q])
+
+
+def zero_attack(key: jax.Array, u: jax.Array, q: int) -> jax.Array:
+    """Beyond-paper: first q rows zeroed (crash-stop workers)."""
+    del key
+    return u.at[:q].set(0.0)
+
+
+# ---------------------------------------------------------------------------
+# Dimensional (generalized) attacks
+# ---------------------------------------------------------------------------
+
+def _flip_bits_f32(x: jax.Array, bits: tuple) -> jax.Array:
+    """XOR the given bits (1-indexed from the LSB) of each fp32 value.
+
+    IEEE754 single: bit 32 = sign, bits 24-31 = exponent, 1-23 = mantissa.
+    The paper's 22/30/31/32 therefore hits a high mantissa bit, the two top
+    exponent bits, and the sign — turning O(1) values into O(±1e19) garbage,
+    which is what makes the attack destructive (a low-mantissa reading would
+    perturb values by ~1e-4 and no defense would even be needed)."""
+    mask = 0
+    for bit in bits:
+        mask |= 1 << (bit - 1)
+    xi = jax.lax.bitcast_convert_type(x.astype(jnp.float32), jnp.uint32)
+    return jax.lax.bitcast_convert_type(xi ^ jnp.uint32(mask), jnp.float32)
+
+
+def bitflip_attack(key: jax.Array, u: jax.Array, q: int,
+                   num_dims: int = 1000,
+                   bits: tuple = (22, 30, 31, 32)) -> jax.Array:
+    """§5.1.3: for each of the first ``num_dims`` dimensions, q of the m
+    values get their bits flipped.  The corrupted row differs per dimension
+    (uniformly random), so every worker row is partially Byzantine — the
+    dimensional model of Definition 4."""
+    m, d = u.shape
+    nd = min(num_dims, d)
+    # Choose q distinct rows per attacked dimension.
+    scores = jax.random.uniform(key, (m, nd))
+    ranks = jnp.argsort(jnp.argsort(scores, axis=0), axis=0)  # 0..m-1 per column
+    hit = ranks < q  # (m, nd) — exactly q True per column
+    flipped = _flip_bits_f32(u[:, :nd], bits)
+    attacked = jnp.where(hit, flipped, u[:, :nd])
+    return u.at[:, :nd].set(attacked.astype(u.dtype))
+
+
+def gambler_attack(key: jax.Array, u: jax.Array,
+                   num_servers: int = 20, prob: float = 0.0005,
+                   scale: float = -1e20) -> jax.Array:
+    """§5.1.4: parameters are partitioned evenly over ``num_servers``; the
+    attacker owns server 0 and multiplies each value it relays by ``scale``
+    with probability ``prob``.  Corruption hits a contiguous 1/num_servers
+    slice of the dimensions, any row."""
+    m, d = u.shape
+    server_size = max(1, d // num_servers)
+    kmask, = jax.random.split(key, 1)
+    hit = jax.random.bernoulli(kmask, prob, (m, server_size))
+    slice_ = u[:, :server_size]
+    attacked = jnp.where(hit, scale * slice_, slice_)
+    return u.at[:, :server_size].set(attacked)
+
+
+# ---------------------------------------------------------------------------
+# Dispatch
+# ---------------------------------------------------------------------------
+
+def make_attack(cfg: AttackConfig) -> Optional[Attack]:
+    """Build a ``(key, u) -> u_tilde`` closure from the config (None = clean)."""
+    name = cfg.name.lower()
+    if name in ("none", ""):
+        return None
+    q = cfg.num_byzantine
+    table: Dict[str, Attack] = {
+        "gaussian": lambda k, u: gaussian_attack(k, u, q, cfg.gaussian_std),
+        "omniscient": lambda k, u: omniscient_attack(k, u, q, cfg.omniscient_scale),
+        "signflip": lambda k, u: signflip_attack(k, u, q),
+        "zero": lambda k, u: zero_attack(k, u, q),
+        "bitflip": lambda k, u: bitflip_attack(k, u, q, cfg.bitflip_dims,
+                                               cfg.bitflip_bits),
+        "gambler": lambda k, u: gambler_attack(k, u, cfg.gambler_servers,
+                                               cfg.gambler_prob,
+                                               cfg.gambler_scale),
+    }
+    if name not in table:
+        raise ValueError(f"unknown attack {cfg.name!r}; have {sorted(table)}")
+    return table[name]
+
+
+CLASSIC_ATTACKS = ("gaussian", "omniscient", "signflip", "zero")
+DIMENSIONAL_ATTACKS = ("bitflip", "gambler")

@@ -1,0 +1,53 @@
+"""Theoretical Δ-resilience bounds from the paper (Lemma 1, Theorems 1-2).
+
+These are pure-python helpers used by tests (variance-bound property tests)
+and by ``benchmarks/bounds_check.py`` to validate the implementation against
+the paper's own theory.
+"""
+from __future__ import annotations
+
+
+def check_classic_assumption(m: int, q: int) -> bool:
+    """Krum's assumption: 2q + 2 < m (Lemma 1)."""
+    return 2 * q + 2 < m
+
+
+def check_dimensional_assumption(m: int, q: int) -> bool:
+    """Trmean/Phocas assumption: 2q < m per dimension (Theorems 1-2)."""
+    return 2 * q < m
+
+
+def delta_krum(m: int, q: int, V: float) -> float:
+    """Δ₀ for Krum (Lemma 1, Blanchard et al. Proposition 1)."""
+    if not check_classic_assumption(m, q):
+        raise ValueError(f"Krum needs 2q+2 < m (m={m}, q={q})")
+    return (6 * m - 6 * q
+            + (4 * q * (m - q - 2) + 4 * q ** 2 * (m - q - 1)) / (m - 2 * q - 2)) * V
+
+
+def delta_trmean(m: int, q: int, b: int, V: float) -> float:
+    """Δ₁ = 2(b+1)(m-q)/(m-b-q)² · V (Theorem 1). Requires b >= q, 2q < m."""
+    if not check_dimensional_assumption(m, q):
+        raise ValueError(f"Trmean needs 2q < m (m={m}, q={q})")
+    if b < q:
+        raise ValueError(f"bound proved for b >= q (b={b}, q={q})")
+    return 2.0 * (b + 1) * (m - q) / (m - b - q) ** 2 * V
+
+
+def delta_phocas(m: int, q: int, b: int, V: float) -> float:
+    """Δ₂ = [4 + 12(b+1)(m-q)/(m-b-q)²] · V (Theorem 2)."""
+    if not check_dimensional_assumption(m, q):
+        raise ValueError(f"Phocas needs 2q < m (m={m}, q={q})")
+    if b < q:
+        raise ValueError(f"bound proved for b >= q (b={b}, q={q})")
+    return (4.0 + 12.0 * (b + 1) * (m - q) / (m - b - q) ** 2) * V
+
+
+def sgd_convex_error_floor(mu: float, L: float, gamma: float, delta: float) -> float:
+    """Constant error term of Theorem 3: (μ+L)/(μL) · γ · √Δ."""
+    return (mu + L) / (mu * L) * gamma * delta ** 0.5
+
+
+def sgd_nonconvex_floor(delta: float) -> float:
+    """Stationarity floor of Theorem 4 (the +Δ term)."""
+    return delta

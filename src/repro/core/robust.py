@@ -1,0 +1,241 @@
+"""Robust aggregation engine: pytree-level + distributed (shard_map) layouts.
+
+Two distributed layouts (see DESIGN.md §2):
+
+* ``replicated`` — paper-faithful PS emulation.  ``all_gather`` the full local
+  gradient over the worker axes, every device robust-aggregates the complete
+  (m, D_local) matrix redundantly.  Collective bytes ~ m·D per device.
+
+* ``sharded`` — beyond-paper *robust reduce-scatter*.  ``all_to_all`` re-tiles
+  the worker-gradient matrix so each device holds (m, D_local/m), aggregates
+  its slice once, then ``all_gather`` (tiled) rebuilds the update.  This is the
+  paper's own multi-server parameter partitioning (§5.1.4) turned into a TPU
+  collective schedule; bytes ~ 2·D, aggregation compute 1/m.
+
+Both layouts support the coordinate-wise rules directly; Krum-family rules
+additionally ``psum`` partial pairwise squared distances over the worker axes
+(sharded) and over the ``model`` axis (tensor-parallel shards), so vector-wise
+selection sees full-vector geometry.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.flatten_util import ravel_pytree
+
+from repro.core import aggregators
+from repro.core.attacks import AttackConfig, make_attack
+
+
+@dataclasses.dataclass(frozen=True)
+class RobustConfig:
+    """Configuration of the robust-aggregation stage of ``train_step``."""
+    rule: str = "phocas"          # mean|median|trmean|phocas|krum|multikrum|geomedian
+    b: int = 2                    # trim parameter (trmean/phocas)
+    q: int = 2                    # assumed Byzantine count (krum family)
+    layout: str = "sharded"       # replicated | sharded
+    use_kernels: bool = False     # route trmean/phocas through Pallas ops
+    agg_dtype: str = "float32"    # robust statistics dtype
+    attack: AttackConfig = dataclasses.field(default_factory=AttackConfig)
+
+    def aggregator(self):
+        if self.use_kernels and self.rule in ("trmean", "phocas"):
+            from repro.kernels import ops as kops  # lazy: avoid import cycle
+            if self.rule == "trmean":
+                return lambda u: kops.trmean(u, self.b)
+            return lambda u: kops.phocas(u, self.b)
+        return aggregators.get_aggregator(self.rule, b=self.b, q=self.q)
+
+
+# ---------------------------------------------------------------------------
+# Local (single host / test) path
+# ---------------------------------------------------------------------------
+
+def aggregate_matrix(u: jax.Array, cfg: RobustConfig,
+                     key: Optional[jax.Array] = None) -> jax.Array:
+    """Aggregate an (m, d) worker matrix, optionally injecting the attack."""
+    attack = make_attack(cfg.attack)
+    uf = u.astype(cfg.agg_dtype)
+    if attack is not None:
+        if key is None:
+            raise ValueError("attack configured but no PRNG key supplied")
+        uf = attack(key, uf)
+    return cfg.aggregator()(uf)
+
+
+def aggregate_stacked_tree(stacked, cfg: RobustConfig,
+                           key: Optional[jax.Array] = None):
+    """Aggregate a pytree whose leaves are stacked (m, *leaf_shape) arrays.
+
+    Flattens to a single (m, D) matrix so vector-wise rules (krum) see full
+    gradient geometry, then unflattens the aggregated vector.
+    """
+    leaves = jax.tree_util.tree_leaves(stacked)
+    m = leaves[0].shape[0]
+    # ravel each worker's slice identically
+    flat0, unravel = ravel_pytree(jax.tree.map(lambda x: x[0], stacked))
+    mat = jax.vmap(lambda i: ravel_pytree(
+        jax.tree.map(lambda x: x[i], stacked))[0])(jnp.arange(m))
+    agg = aggregate_matrix(mat, cfg, key)
+    return unravel(agg.astype(flat0.dtype))
+
+
+# ---------------------------------------------------------------------------
+# Distributed path (must be called inside shard_map)
+# ---------------------------------------------------------------------------
+
+def _axis_size(names: Sequence[str]) -> int:
+    size = 1
+    for n in names:
+        size *= jax.lax.axis_size(n)
+    return size
+
+
+def _gather_workers(x: jax.Array, worker_axes: Sequence[str]) -> jax.Array:
+    """all_gather a (D,) local vector over worker axes -> (m_total, D)."""
+    g = x[None]
+    for name in reversed(worker_axes):
+        g = jax.lax.all_gather(g, name, axis=0, tiled=True)
+    return g
+
+
+def _a2a_scatter(x: jax.Array, worker_axes: Sequence[str]) -> jax.Array:
+    """Re-tile a (D,) local vector into (m_total, D/m_total) per device.
+
+    Sequential tiled all_to_all over each worker axis: split the dimension
+    slice, concatenate received blocks along the worker axis (DESIGN.md §2).
+    """
+    m_total = _axis_size(worker_axes)
+    d = x.shape[0]
+    assert d % m_total == 0, f"flat dim {d} not divisible by m={m_total}"
+    first = worker_axes[0]
+    m0 = jax.lax.axis_size(first)
+    u = x.reshape(m0, d // m0)
+    u = jax.lax.all_to_all(u, first, split_axis=0, concat_axis=0, tiled=True)
+    for name in worker_axes[1:]:
+        # split the dim axis, concat along the worker axis
+        u = jax.lax.all_to_all(u, name, split_axis=1, concat_axis=0, tiled=True)
+    return u  # (m_total, d // m_total)
+
+
+def _gather_slices(v: jax.Array, worker_axes: Sequence[str]) -> jax.Array:
+    """Inverse of the dim-sharding of :func:`_a2a_scatter` for the aggregated
+    (D/m_total,) slice -> (D,)."""
+    for name in reversed(worker_axes[1:]):
+        v = jax.lax.all_gather(v, name, axis=0, tiled=True)
+    v = jax.lax.all_gather(v, worker_axes[0], axis=0, tiled=True)
+    return v
+
+
+def _krum_select(mat: jax.Array, cfg: RobustConfig,
+                 psum_axes: Tuple[str, ...]) -> jax.Array:
+    """Krum-family selection with distance partial-sums psum'd over
+    ``psum_axes`` (dim-sharded and/or model-sharded portions)."""
+    m = mat.shape[0]
+    sq = jnp.sum(mat * mat, axis=1)
+    gram = mat @ mat.T
+    d2 = jnp.maximum(sq[:, None] + sq[None, :] - 2.0 * gram, 0.0)
+    # Sequential psums: the partial-distance matrix can be varying over some
+    # axes and invarying over others, which a single multi-axis psum rejects.
+    for ax in psum_axes:
+        d2 = jax.lax.psum(d2, ax)
+    d2 = d2 + jnp.diag(jnp.full((m,), jnp.inf, d2.dtype))
+    k = m - cfg.q - 2
+    if k <= 0:
+        raise ValueError(f"Krum requires m-q-2 > 0 (m={m}, q={cfg.q})")
+    nearest = jnp.sort(d2, axis=1)[:, :k]
+    scores = jnp.sum(nearest, axis=1)
+    if cfg.rule == "krum":
+        return mat[jnp.argmin(scores)]
+    _, idx = jax.lax.top_k(-scores, k)   # multikrum
+    return jnp.mean(mat[idx], axis=0)
+
+
+def _geomedian_dist(mat: jax.Array, psum_axes: Tuple[str, ...],
+                    iters: int = 8, eps: float = 1e-8) -> jax.Array:
+    """Weiszfeld iterations on a dim-sharded (m, D_slice) matrix: partial
+    squared distances are psum'd over ``psum_axes`` so weights use the full
+    vector geometry while updates stay slice-local."""
+    def step(z, _):
+        d2 = jnp.sum((mat - z[None]) ** 2, axis=1)
+        for ax in psum_axes:
+            d2 = jax.lax.psum(d2, ax)
+        w = 1.0 / jnp.maximum(jnp.sqrt(d2), eps)
+        z_new = jnp.sum(mat * w[:, None], axis=0) / jnp.sum(w)
+        return z_new, None
+
+    z, _ = jax.lax.scan(step, jnp.mean(mat, axis=0), None, length=iters)
+    return z
+
+
+def robust_aggregate_dist(grad_tree, cfg: RobustConfig,
+                          worker_axes: Sequence[str],
+                          model_axes: Sequence[str] = (),
+                          key: Optional[jax.Array] = None):
+    """Aggregate per-worker gradient pytrees inside ``shard_map``.
+
+    Args:
+      grad_tree: the *local* gradient pytree (this worker-shard's gradient,
+        already psum'd over ``model_axes`` microbatch internals as needed).
+      cfg: robust config (rule, layout, simulated attack).
+      worker_axes: mesh axes playing the paper's "worker" role, e.g.
+        ``("data",)`` or ``("pod", "data")``.
+      model_axes: tensor-parallel axes (needed only by Krum-family distances).
+      key: per-step PRNG key (replicated), required when an attack is set.
+
+    Returns the aggregated gradient pytree with the input structure/dtypes.
+    """
+    worker_axes = tuple(worker_axes)
+    m = _axis_size(worker_axes)
+    flat, unravel = ravel_pytree(grad_tree)
+    flat = flat.astype(cfg.agg_dtype)
+    d = flat.shape[0]
+    pad = (-d) % m
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+
+    attack = make_attack(cfg.attack)
+    vector_wise = cfg.rule in aggregators.VECTOR_WISE
+
+    if cfg.layout == "replicated":
+        mat = _gather_workers(flat, worker_axes)          # (m, D)
+        if attack is not None:
+            mat = attack(key, mat)
+        if cfg.rule == "geomedian":
+            agg = _geomedian_dist(mat, tuple(model_axes))
+        elif vector_wise:
+            agg = _krum_select(mat, cfg, tuple(model_axes))
+        else:
+            agg = cfg.aggregator()(mat)                   # (D,)
+    elif cfg.layout == "sharded":
+        mat = _a2a_scatter(flat, worker_axes)             # (m, D/m)
+        if attack is not None:
+            # Each device is a "server" owning a slice of the dims — exactly
+            # the paper's §5.1.4 multi-server partitioning.
+            key = jax.random.fold_in(key, _worker_slice_index(worker_axes)) \
+                if key is not None else None
+            mat = attack(key, mat)
+        if cfg.rule == "geomedian":
+            agg_slice = _geomedian_dist(mat, worker_axes + tuple(model_axes))
+        elif vector_wise:
+            agg_slice = _krum_select(mat, cfg,
+                                     worker_axes + tuple(model_axes))
+        else:
+            agg_slice = cfg.aggregator()(mat)             # (D/m,)
+        agg = _gather_slices(agg_slice, worker_axes)      # (D,)
+    else:
+        raise ValueError(f"unknown layout {cfg.layout!r}")
+
+    if pad:
+        agg = agg[:d]
+    return unravel(agg.astype(ravel_pytree(grad_tree)[0].dtype))
+
+
+def _worker_slice_index(worker_axes: Sequence[str]) -> jax.Array:
+    idx = jnp.int32(0)
+    for name in worker_axes:
+        idx = idx * jax.lax.axis_size(name) + jax.lax.axis_index(name)
+    return idx

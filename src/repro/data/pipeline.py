@@ -1,0 +1,97 @@
+"""Data pipeline: deterministic synthetic streams (offline container).
+
+``TokenStream`` — an LM pretraining stand-in with *learnable structure*: a
+fixed random bigram transition table generates token sequences, so the loss
+has real signal (models reduce it well below uniform entropy).
+
+``ClassificationData`` — the paper's MNIST/CIFAR stand-in: a Gaussian-mixture
+multiclass problem (10 classes, configurable dim), the substrate for the
+Byzantine-resilience experiments (benchmarks/fig2* etc.).
+
+Both are pure-PRNG: every batch is a deterministic function of (seed, step),
+which makes multi-host loading trivial (each host computes its shard) and
+runs identically in tests.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass
+class TokenStream:
+    vocab_size: int
+    seq_len: int
+    global_batch: int
+    seed: int = 0
+    num_modes: int = 64               # bigram table rank (structure strength)
+
+    def __post_init__(self):
+        key = jax.random.PRNGKey(self.seed)
+        k1, k2 = jax.random.split(key)
+        v = min(self.vocab_size, 4096)  # active vocab (keeps table small)
+        logits = (2.5 * jax.random.normal(k1, (self.num_modes, v)))
+        self._table = jax.nn.softmax(logits)           # (modes, v)
+        self._mode_of = jax.random.randint(k2, (v,), 0, self.num_modes)
+        self._active = v
+
+    def batch(self, step: int) -> dict:
+        """Returns {'tokens': (B,S), 'labels': (B,S)} — labels are the
+        next-token targets (sequence shifted by one)."""
+        key = jax.random.fold_in(jax.random.PRNGKey(self.seed), step)
+        B, S = self.global_batch, self.seq_len
+
+        def gen_seq(k):
+            k0, kscan = jax.random.split(k)
+            first = jax.random.randint(k0, (), 0, self._active)
+
+            def step_fn(tok, kk):
+                nxt = jax.random.categorical(kk, jnp.log(
+                    self._table[self._mode_of[tok]] + 1e-9))
+                return nxt, nxt
+
+            _, rest = jax.lax.scan(step_fn, first,
+                                   jax.random.split(kscan, S))
+            return jnp.concatenate([first[None], rest])
+
+        toks = jax.vmap(gen_seq)(jax.random.split(key, B))   # (B, S+1)
+        return {"tokens": toks[:, :-1].astype(jnp.int32),
+                "labels": toks[:, 1:].astype(jnp.int32)}
+
+
+@dataclasses.dataclass
+class ClassificationData:
+    """Gaussian-mixture classification (paper experiment substrate)."""
+    num_classes: int = 10
+    dim: int = 784                    # MNIST-like
+    noise: float = 1.0
+    seed: int = 0
+
+    def __post_init__(self):
+        key = jax.random.PRNGKey(self.seed)
+        self.means = 2.0 * jax.random.normal(key, (self.num_classes, self.dim))
+
+    def batch(self, step: int, batch_size: int) -> dict:
+        key = jax.random.fold_in(jax.random.PRNGKey(self.seed + 1), step)
+        k1, k2 = jax.random.split(key)
+        y = jax.random.randint(k1, (batch_size,), 0, self.num_classes)
+        x = self.means[y] + self.noise * jax.random.normal(
+            k2, (batch_size, self.dim))
+        return {"x": x, "y": y}
+
+    def test_set(self, n: int = 2048) -> dict:
+        return self.batch(10_000_019, n)
+
+
+def make_worker_batches(batch: dict, m: int) -> dict:
+    """Reshape a global batch to (m, B/m, ...) worker groups (the paper's m
+    workers — axis 0 is sharded over the mesh worker axes)."""
+    def split(x):
+        B = x.shape[0]
+        assert B % m == 0, f"global batch {B} not divisible by m={m}"
+        return x.reshape(m, B // m, *x.shape[1:])
+
+    return jax.tree.map(split, batch)

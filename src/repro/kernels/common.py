@@ -1,0 +1,45 @@
+"""Shared helpers for the aggregation Pallas kernels."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+# Lane-axis tile: multiple of 128 (TPU lane width).  With m <= 64 workers on
+# the sublane axis, an (m, 2048) f32 block is m*8KB <= 512KB — comfortably
+# inside the ~16MB VMEM budget even with double buffering.
+DEFAULT_TILE_D = 2048
+
+# On CPU containers Pallas runs the kernel body in interpret mode.
+INTERPRET = jax.default_backend() == "cpu"
+
+
+def extract_min(u: jax.Array, valid: jax.Array, total: jax.Array):
+    """Remove one occurrence of the per-column minimum over the still-valid
+    entries from the running sum.
+
+    Returns (updated valid mask, updated total, removed values).
+    u: (m, t) values (never mutated), valid: (m, t) bool, total: (t,).
+    """
+    masked = jnp.where(valid, u, jnp.inf)
+    idx = jnp.argmin(masked, axis=0)                  # (t,)
+    onehot = jax.lax.broadcasted_iota(jnp.int32, u.shape, 0) == idx[None]
+    vals = jnp.sum(jnp.where(onehot, u, 0.0), axis=0)
+    return valid & ~onehot, total - vals, vals
+
+
+def extract_max(u: jax.Array, valid: jax.Array, total: jax.Array):
+    """Mirror of :func:`extract_min` for the per-column maximum."""
+    masked = jnp.where(valid, u, -jnp.inf)
+    idx = jnp.argmax(masked, axis=0)
+    onehot = jax.lax.broadcasted_iota(jnp.int32, u.shape, 0) == idx[None]
+    vals = jnp.sum(jnp.where(onehot, u, 0.0), axis=0)
+    return valid & ~onehot, total - vals, vals
+
+
+def pad_lanes(u: jax.Array, tile: int):
+    """Pad the lane (last) axis of (m, d) to a multiple of ``tile``."""
+    d = u.shape[-1]
+    pad = (-d) % tile
+    if pad:
+        u = jnp.pad(u, ((0, 0), (0, pad)))
+    return u, d

@@ -1,0 +1,1 @@
+from repro.kernels.flashattn.ops import flash_attention  # noqa: F401

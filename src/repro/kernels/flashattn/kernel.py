@@ -1,0 +1,123 @@
+"""Fused flash attention (Pallas, TPU target) — §Perf P5.
+
+Motivation from the roofline log: the chunked-XLA attention materializes f32
+score/softmax tensors in HBM (the dominant slice of the memory term on every
+train/prefill pair).  The fused kernel keeps the (bq, bk) score tile in VMEM
+with an online-softmax accumulator, so per-layer attention HBM traffic drops
+from O(S·T·4B) (f32 scores read+written) to O(S·hd + T·hd) operand traffic —
+for gemma3 train_4k that is ~99% of the score-buffer bytes removed.
+
+Grid: (B·H, nq, nk) with the k axis innermost/sequential; the output tile is
+revisited across nk steps with running (max, denom, acc) scratch in VMEM.
+GQA maps query head bh -> kv head via the BlockSpec index_map, sliding-window
++ causal masking via block-position iota, optional logit softcap (gemma2).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.common import INTERPRET
+
+DEFAULT_BQ = 512
+DEFAULT_BK = 512
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                  scale, causal, window, cap, bq, bk, nk):
+    ik = pl.program_id(2)
+    iq = pl.program_id(1)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0]                                   # (bq, hd)
+    k = k_ref[0]                                   # (bk, hd)
+    v = v_ref[0]
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    if cap is not None:
+        s = cap * jnp.tanh(s / cap)
+
+    q_pos = iq * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+    k_pos = ik * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    mask = jnp.ones((bq, bk), jnp.bool_)
+    if causal:
+        mask &= k_pos <= q_pos
+    if window is not None:
+        mask &= k_pos > q_pos - window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]                            # (bq, 1)
+    m_cur = jnp.max(s, axis=1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    p = jnp.exp(s - m_new)                         # (bq, bk)
+    correction = jnp.exp(m_prev - m_new)           # (bq, 1)
+    l_ref[...] = l_ref[...] * correction + jnp.sum(p, axis=1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * correction + jax.lax.dot_general(
+        p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(ik == nk - 1)
+    def _finish():
+        denom = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0] = (acc_ref[...] / denom).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "cap",
+                                             "scale", "bq", "bk",
+                                             "interpret"))
+def flash_attention_pallas(q, k, v, *, causal: bool = True,
+                           window: Optional[int] = None,
+                           cap: Optional[float] = None,
+                           scale: Optional[float] = None,
+                           bq: int = DEFAULT_BQ, bk: int = DEFAULT_BK,
+                           interpret: bool = INTERPRET) -> jax.Array:
+    """q: (B,S,H,hd), k/v: (B,T,Kv,hd) -> (B,S,H,hd).  S % bq == T % bk == 0
+    (the ops wrapper pads)."""
+    B, S, H, hd = q.shape
+    T, Kv = k.shape[1], k.shape[2]
+    rep = H // Kv
+    if scale is None:
+        scale = hd ** -0.5
+    bq = min(bq, S)
+    bk = min(bk, T)
+    assert S % bq == 0 and T % bk == 0
+    nq, nk = S // bq, T // bk
+
+    qf = q.transpose(0, 2, 1, 3).reshape(B * H, S, hd)
+    kf = k.transpose(0, 2, 1, 3).reshape(B * Kv, T, hd)
+    vf = v.transpose(0, 2, 1, 3).reshape(B * Kv, T, hd)
+
+    def kv_map(bh, iq_, ik_):
+        return (bh // rep, ik_, 0)
+
+    out = pl.pallas_call(
+        functools.partial(_flash_kernel, scale=scale, causal=causal,
+                          window=window, cap=cap, bq=bq, bk=bk, nk=nk),
+        grid=(B * H, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, bq, hd), lambda bh, iq_, ik_: (bh, iq_, 0)),
+            pl.BlockSpec((1, bk, hd), kv_map),
+            pl.BlockSpec((1, bk, hd), kv_map),
+        ],
+        out_specs=pl.BlockSpec((1, bq, hd), lambda bh, iq_, ik_: (bh, iq_, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * H, S, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),      # running max
+            pltpu.VMEM((bq, 1), jnp.float32),      # running denom
+            pltpu.VMEM((bq, hd), jnp.float32),     # output accumulator
+        ],
+        interpret=interpret,
+    )(qf, kf, vf)
+    return out.reshape(B, H, S, hd).transpose(0, 2, 1, 3)

@@ -1,0 +1,36 @@
+"""Pure-jnp oracle for the flash-attention kernel (naive full-score path)."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True,
+                        window: Optional[int] = None,
+                        cap: Optional[float] = None,
+                        scale: Optional[float] = None) -> jax.Array:
+    """q: (B,S,H,hd), k/v: (B,T,Kv,hd) -> (B,S,H,hd)."""
+    B, S, H, hd = q.shape
+    T, Kv = k.shape[1], k.shape[2]
+    rep = H // Kv
+    if scale is None:
+        scale = hd ** -0.5
+    qg = q.reshape(B, S, Kv, rep, hd)
+    s = jnp.einsum("bqkrh,btkh->bkrqt", qg.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    if cap is not None:
+        s = cap * jnp.tanh(s / cap)
+    q_pos = jnp.arange(S)
+    k_pos = jnp.arange(T)
+    mask = jnp.ones((S, T), bool)
+    if causal:
+        mask &= k_pos[None] <= q_pos[:, None]
+    if window is not None:
+        mask &= k_pos[None] > q_pos[:, None] - window
+    s = jnp.where(mask[None, None, None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(jnp.isnan(p), 0.0, p)
+    out = jnp.einsum("bkrqt,btkh->bqkrh", p, v.astype(jnp.float32))
+    return out.reshape(B, S, H, hd).astype(q.dtype)

@@ -1,0 +1,1 @@
+from repro.kernels.krum.ops import pairwise_sq_dists, krum, multikrum  # noqa: F401

@@ -1,0 +1,54 @@
+"""Pallas TPU kernel: Krum pairwise squared distances, d-tiled Gram accumulation.
+
+Krum's O(m²d) cost is dominated by the pairwise-distance pass, which maps
+onto the MXU as a Gram matrix: per (m, TILE_D) block compute
+``G += U·Uᵀ`` (128-aligned contraction) and the row square-norms, then the
+epilogue assembles ``d²(i,j) = n_i + n_j - 2·G_ij`` after the grid finishes.
+The (m, m) accumulator lives in the output VMEM block across grid steps.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.common import DEFAULT_TILE_D, INTERPRET, pad_lanes
+
+
+def _gram_kernel(u_ref, gram_ref, norms_ref):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        gram_ref[...] = jnp.zeros_like(gram_ref)
+        norms_ref[...] = jnp.zeros_like(norms_ref)
+
+    u = u_ref[...].astype(jnp.float32)                     # (m, TILE_D)
+    gram_ref[...] += jax.lax.dot_general(
+        u, u, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)                # (m, m) on the MXU
+    norms_ref[...] += jnp.sum(u * u, axis=1, keepdims=True)
+
+
+@functools.partial(jax.jit, static_argnames=("tile_d", "interpret"))
+def pairwise_sq_dists_pallas(u: jax.Array, *, tile_d: int = DEFAULT_TILE_D,
+                             interpret: bool = INTERPRET) -> jax.Array:
+    """(m, d) -> (m, m) squared distances via d-tiled MXU Gram accumulation."""
+    m = u.shape[0]
+    u = u.astype(jnp.float32)
+    u, _ = pad_lanes(u, tile_d)
+    dp = u.shape[1]
+    gram, norms = pl.pallas_call(
+        _gram_kernel,
+        grid=(dp // tile_d,),
+        in_specs=[pl.BlockSpec((m, tile_d), lambda i: (0, i))],
+        out_specs=[pl.BlockSpec((m, m), lambda i: (0, 0)),
+                   pl.BlockSpec((m, 1), lambda i: (0, 0))],
+        out_shape=[jax.ShapeDtypeStruct((m, m), jnp.float32),
+                   jax.ShapeDtypeStruct((m, 1), jnp.float32)],
+        interpret=interpret,
+    )(u)
+    n = norms[:, 0]
+    return jnp.maximum(n[:, None] + n[None, :] - 2.0 * gram, 0.0)

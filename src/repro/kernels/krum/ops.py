@@ -1,0 +1,40 @@
+"""Jit'd wrappers: kernel-backed Krum / Multi-Krum."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.krum.kernel import pairwise_sq_dists_pallas
+from repro.kernels.krum.ref import pairwise_sq_dists_ref
+
+
+def pairwise_sq_dists(u: jax.Array, *, use_kernel: bool = True) -> jax.Array:
+    if not use_kernel:
+        return pairwise_sq_dists_ref(u)
+    return pairwise_sq_dists_pallas(u)
+
+
+def _scores(u: jax.Array, q: int, use_kernel: bool) -> jax.Array:
+    m = u.shape[0]
+    k = m - q - 2
+    if k <= 0:
+        raise ValueError(f"Krum requires m - q - 2 > 0 (m={m}, q={q})")
+    d2 = pairwise_sq_dists(u, use_kernel=use_kernel)
+    d2 = d2 + jnp.diag(jnp.full((m,), jnp.inf, d2.dtype))
+    return jnp.sum(jnp.sort(d2, axis=1)[:, :k], axis=1)
+
+
+def krum(u: jax.Array, q: int, *, use_kernel: bool = True) -> jax.Array:
+    """(m, d) -> (d,): the candidate with minimal Krum score (Definition 3)."""
+    return u[jnp.argmin(_scores(u, q, use_kernel))].astype(jnp.float32)
+
+
+def multikrum(u: jax.Array, q: int, k: int | None = None, *,
+              use_kernel: bool = True) -> jax.Array:
+    """(m, d) -> (d,): mean of the k lowest-score candidates."""
+    m = u.shape[0]
+    if k is None:
+        k = m - q - 2
+    scores = _scores(u, q, use_kernel)
+    _, idx = jax.lax.top_k(-scores, k)
+    return jnp.mean(u.astype(jnp.float32)[idx], axis=0)

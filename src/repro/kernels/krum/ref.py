@@ -1,0 +1,12 @@
+"""Pure-jnp oracle for the Krum pairwise-distance matrix."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def pairwise_sq_dists_ref(u: jax.Array) -> jax.Array:
+    """(m, d) -> (m, m) squared Euclidean distances (direct, no Gram trick)."""
+    uf = u.astype(jnp.float32)
+    diff = uf[:, None, :] - uf[None, :, :]
+    return jnp.sum(diff * diff, axis=-1)

@@ -1,0 +1,4 @@
+"""Facade over the per-kernel ops modules (used by RobustConfig.use_kernels)."""
+from repro.kernels.trmean.ops import trmean  # noqa: F401
+from repro.kernels.phocas.ops import phocas  # noqa: F401
+from repro.kernels.krum.ops import krum, multikrum, pairwise_sq_dists  # noqa: F401

@@ -1,0 +1,1 @@
+from repro.kernels.phocas.ops import phocas  # noqa: F401

@@ -1,0 +1,14 @@
+"""Jit'd public wrapper for the fused Phocas kernel."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.phocas.kernel import phocas_pallas
+from repro.kernels.phocas.ref import phocas_ref
+
+
+def phocas(u: jax.Array, b: int, *, use_kernel: bool = True) -> jax.Array:
+    """Phocas aggregation; (m, d) -> (d,)."""
+    if b == 0 or not use_kernel:
+        return phocas_ref(u, b)
+    return phocas_pallas(u, b)

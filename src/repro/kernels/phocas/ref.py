@@ -1,0 +1,21 @@
+"""Pure-jnp oracle for Phocas (Definition 8)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.trmean.ref import trmean_ref
+
+
+def phocas_ref(u: jax.Array, b: int) -> jax.Array:
+    """(m, d) -> (d,): mean of the (m-b) values nearest to the b-trimmed mean."""
+    m = u.shape[0]
+    uf = u.astype(jnp.float32)
+    center = trmean_ref(uf, b)
+    if b == 0:
+        return jnp.mean(uf, axis=0)
+    dist = jnp.abs(uf - center[None])
+    order = jnp.argsort(dist, axis=0)
+    ranks = jnp.argsort(order, axis=0)
+    keep = (ranks < (m - b)).astype(uf.dtype)
+    return jnp.sum(uf * keep, axis=0) / (m - b)

@@ -1,0 +1,1 @@
+from repro.kernels.trmean.ops import trmean  # noqa: F401

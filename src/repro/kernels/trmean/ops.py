@@ -1,0 +1,18 @@
+"""Jit'd public wrapper for the trimmed-mean kernel."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.trmean.kernel import trmean_pallas
+from repro.kernels.trmean.ref import trmean_ref
+
+
+def trmean(u: jax.Array, b: int, *, use_kernel: bool = True) -> jax.Array:
+    """Coordinate-wise b-trimmed mean; (m, d) -> (d,).
+
+    ``use_kernel=False`` falls back to the jnp oracle (used for leaves too
+    small to be worth a pallas_call, and in tests as the reference).
+    """
+    if b == 0 or not use_kernel:
+        return trmean_ref(u, b) if b else u.mean(axis=0)
+    return trmean_pallas(u, b)

@@ -1,0 +1,12 @@
+"""Pure-jnp oracle for the coordinate-wise b-trimmed mean (Definition 7)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def trmean_ref(u: jax.Array, b: int) -> jax.Array:
+    """(m, d) -> (d,): average of the middle m-2b order statistics per column."""
+    m = u.shape[0]
+    s = jnp.sort(u.astype(jnp.float32), axis=0)
+    return jnp.mean(s[b : m - b], axis=0)

@@ -1,0 +1,79 @@
+"""The paper's CIFAR10 CNN (Table 3): 4 conv (32,32,64,64) + 2 dense (512) +
+10-way softmax.  Dropout omitted (deterministic training; noted in DESIGN.md).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.registry import Model
+
+
+def _conv_init(key, kh, kw, cin, cout):
+    scale = 1.0 / jnp.sqrt(kh * kw * cin)
+    return scale * jax.random.normal(key, (kh, kw, cin, cout))
+
+
+def init_cnn(key, *, in_ch=3, num_classes=10, size=32) -> dict:
+    ks = jax.random.split(key, 7)
+    flat = (size // 4) * (size // 4) * 64
+    return {
+        "conv1": {"w": _conv_init(ks[0], 3, 3, in_ch, 32)},
+        "conv2": {"w": _conv_init(ks[1], 3, 3, 32, 32)},
+        "conv3": {"w": _conv_init(ks[2], 3, 3, 32, 64)},
+        "conv4": {"w": _conv_init(ks[3], 3, 3, 64, 64)},
+        "fc1": {"w": jax.random.normal(ks[4], (flat, 512)) / jnp.sqrt(flat),
+                "b": jnp.zeros((512,))},
+        "fc2": {"w": jax.random.normal(ks[5], (512, 512)) / jnp.sqrt(512.0),
+                "b": jnp.zeros((512,))},
+        "fc3": {"w": jax.random.normal(ks[6], (512, num_classes)) / 22.6,
+                "b": jnp.zeros((num_classes,))},
+    }
+
+
+def _conv(x, w):
+    return jax.lax.conv_general_dilated(
+        x, w, window_strides=(1, 1), padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+
+
+def _pool(x):
+    return jax.lax.reduce_window(x, -jnp.inf, jax.lax.max, (1, 2, 2, 1),
+                                 (1, 2, 2, 1), "VALID")
+
+
+def cnn_logits(params, x: jax.Array) -> jax.Array:
+    """x: (B, H, W, C)."""
+    h = jax.nn.relu(_conv(x, params["conv1"]["w"]))
+    h = jax.nn.relu(_conv(h, params["conv2"]["w"]))
+    h = _pool(h)
+    h = jax.nn.relu(_conv(h, params["conv3"]["w"]))
+    h = jax.nn.relu(_conv(h, params["conv4"]["w"]))
+    h = _pool(h)
+    h = h.reshape(h.shape[0], -1)
+    h = jax.nn.relu(h @ params["fc1"]["w"] + params["fc1"]["b"])
+    h = jax.nn.relu(h @ params["fc2"]["w"] + params["fc2"]["b"])
+    return h @ params["fc3"]["w"] + params["fc3"]["b"]
+
+
+def cnn_loss(params, batch) -> jax.Array:
+    logp = jax.nn.log_softmax(cnn_logits(params, batch["x"]))
+    return -jnp.mean(jnp.take_along_axis(logp, batch["y"][:, None], 1))
+
+
+def cnn_topk_accuracy(params, batch, k: int = 3) -> jax.Array:
+    logits = cnn_logits(params, batch["x"])
+    topk = jax.lax.top_k(logits, k)[1]
+    return jnp.mean(jnp.any(topk == batch["y"][:, None], axis=1)
+                    .astype(jnp.float32))
+
+
+def build_cnn_model(**kw) -> Model:
+    return Model(
+        cfg=None,
+        init=lambda key: init_cnn(key, **kw),
+        forward=lambda p, b: (cnn_logits(p, b["x"]), jnp.zeros(())),
+        loss=cnn_loss,
+        init_cache=lambda bs, ml: {},
+        decode_step=None,
+    )

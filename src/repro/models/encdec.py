@@ -1,0 +1,218 @@
+"""Encoder-decoder transformer (whisper backbone).
+
+The mel-spectrogram + conv frontend is a STUB per the assignment carve-out:
+``batch["audio_embeds"]`` carries precomputed frame embeddings
+(B, encoder_seq_len, frontend_dim).  Encoder: bidirectional self-attention
+with sinusoidal positions.  Decoder: causal self-attention (cached) +
+cross-attention to the encoder output (cached) + GLU MLP.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common as C
+
+
+def _sinusoid(S: int, d: int) -> jax.Array:
+    pos = jnp.arange(S)[:, None].astype(jnp.float32)
+    dim = jnp.arange(0, d, 2)[None].astype(jnp.float32)
+    angle = pos / jnp.power(10_000.0, dim / d)
+    pe = jnp.zeros((S, d), jnp.float32)
+    pe = pe.at[:, 0::2].set(jnp.sin(angle))
+    pe = pe.at[:, 1::2].set(jnp.cos(angle))
+    return pe
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+def _init_enc_layer(key, cfg):
+    dt = C.dtype_of(cfg)
+    ks = jax.random.split(key, 2)
+    return {
+        "ln1": C.init_norm(cfg.d_model, dt),
+        "attn": C.init_attention(ks[0], cfg),
+        "ln2": C.init_norm(cfg.d_model, dt),
+        "mlp": C.init_mlp(ks[1], cfg),
+    }
+
+
+def _init_dec_layer(key, cfg):
+    dt = C.dtype_of(cfg)
+    ks = jax.random.split(key, 3)
+    return {
+        "ln1": C.init_norm(cfg.d_model, dt),
+        "self_attn": C.init_attention(ks[0], cfg),
+        "ln_x": C.init_norm(cfg.d_model, dt),
+        "cross_attn": C.init_attention(ks[1], cfg),
+        "ln2": C.init_norm(cfg.d_model, dt),
+        "mlp": C.init_mlp(ks[2], cfg),
+    }
+
+
+def init(key, cfg) -> dict:
+    dt = C.dtype_of(cfg)
+    ks = jax.random.split(key, 5)
+    enc_keys = jax.random.split(ks[0], cfg.encoder_layers)
+    dec_keys = jax.random.split(ks[1], cfg.num_layers)
+    return {
+        "frontend_proj": C.init_linear(ks[2], cfg.frontend_dim, cfg.d_model, dt),
+        "enc": jax.vmap(lambda k: _init_enc_layer(k, cfg))(enc_keys),
+        "enc_norm": C.init_norm(cfg.d_model, dt),
+        "embed": C.init_embedding(ks[3], cfg.vocab_size, cfg.d_model, dt),
+        "dec": jax.vmap(lambda k: _init_dec_layer(k, cfg))(dec_keys),
+        "dec_norm": C.init_norm(cfg.d_model, dt),
+        "lm_head": C.init_linear(ks[4], cfg.d_model, cfg.vocab_size, dt),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Encoder
+# ---------------------------------------------------------------------------
+
+def _enc_attn(p, cfg, x):
+    B, S, d = x.shape
+    H, Kv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    q = C.linear(p["wq"], x).reshape(B, S, H, hd)
+    k = C.linear(p["wk"], x).reshape(B, S, Kv, hd)
+    v = C.linear(p["wv"], x).reshape(B, S, Kv, hd)
+    pos = jnp.arange(S)
+    out = C.attention_core(q, k, v, pos, pos, causal=False)
+    return C.linear(p["wo"], out.reshape(B, S, H * hd))
+
+
+def encode(params, cfg, audio_embeds, *, remat: str = "none") -> jax.Array:
+    """(B, F, frontend_dim) -> (B, F, d_model)."""
+    x = C.linear(params["frontend_proj"],
+                 audio_embeds.astype(C.dtype_of(cfg)))
+    x = x + _sinusoid(x.shape[1], cfg.d_model).astype(x.dtype)
+
+    def body(x, lp):
+        h = C.rmsnorm(lp["ln1"], x, cfg.norm_eps)
+        x = x + _enc_attn(lp["attn"], cfg, h)
+        h = C.rmsnorm(lp["ln2"], x, cfg.norm_eps)
+        return x + C.mlp_block(lp["mlp"], h), None
+
+    if remat != "none":
+        body = jax.checkpoint(body)
+    x, _ = jax.lax.scan(body, x, params["enc"])
+    return C.rmsnorm(params["enc_norm"], x, cfg.norm_eps)
+
+
+# ---------------------------------------------------------------------------
+# Decoder
+# ---------------------------------------------------------------------------
+
+def _cross_attn(p, cfg, x, enc_kv):
+    B, S, d = x.shape
+    H, Kv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    q = C.linear(p["wq"], x).reshape(B, S, H, hd)
+    k, v = enc_kv
+    T = k.shape[1]
+    out = C.attention_core(q, k, v, jnp.arange(S), jnp.arange(T), causal=False)
+    return C.linear(p["wo"], out.reshape(B, S, H * hd))
+
+
+def _dec_layer(lp, cfg, x, enc_kv, *, positions, cache=None):
+    h = C.rmsnorm(lp["ln1"], x, cfg.norm_eps)
+    sa, nc = C.attention_block(lp["self_attn"], cfg, h, positions=positions,
+                               window=None, cache=cache)
+    x = x + sa
+    h = C.rmsnorm(lp["ln_x"], x, cfg.norm_eps)
+    x = x + _cross_attn(lp["cross_attn"], cfg, h, enc_kv)
+    h = C.rmsnorm(lp["ln2"], x, cfg.norm_eps)
+    return x + C.mlp_block(lp["mlp"], h), nc
+
+
+def _cross_kv(lp, cfg, enc_out):
+    B, T, _ = enc_out.shape
+    Kv, hd = cfg.num_kv_heads, cfg.head_dim
+    k = C.linear(lp["cross_attn"]["wk"], enc_out).reshape(B, T, Kv, hd)
+    v = C.linear(lp["cross_attn"]["wv"], enc_out).reshape(B, T, Kv, hd)
+    return k, v
+
+
+def forward(params, cfg, batch, *, remat: str = "none"):
+    """Full enc-dec training forward -> (logits (B,S,V), aux=0)."""
+    enc_out = encode(params, cfg, batch["audio_embeds"], remat=remat)
+    x = C.embed(params["embed"], batch["tokens"]) * math.sqrt(cfg.d_model)
+    positions = jnp.arange(x.shape[1])
+
+    def body(x, lp):
+        enc_kv = _cross_kv(lp, cfg, enc_out)
+        x, _ = _dec_layer(lp, cfg, x, enc_kv, positions=positions)
+        return x, None
+
+    if remat != "none":
+        body = jax.checkpoint(body)
+    x, _ = jax.lax.scan(body, x, params["dec"])
+    x = C.rmsnorm(params["dec_norm"], x, cfg.norm_eps)
+    logits = C.linear(params["lm_head"], x).astype(jnp.float32)
+    return logits, jnp.zeros((), jnp.float32)
+
+
+def loss_fn(params, cfg, batch, *, remat: str = "none") -> jax.Array:
+    logits, _ = forward(params, cfg, batch, remat=remat)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, batch["labels"][..., None], -1)[..., 0]
+    return jnp.mean(nll)
+
+
+def init_cache(cfg, batch_size: int, max_len: int) -> dict:
+    """Self-attn KV per decoder layer + precomputed cross-attn KV (filled by
+    ``prefill_cache`` from the encoder output)."""
+    dt = C.dtype_of(cfg)
+    L, Kv, hd, F = (cfg.num_layers, cfg.num_kv_heads, cfg.head_dim,
+                    cfg.encoder_seq_len)
+    return {
+        "self": {
+            "k": jnp.zeros((L, batch_size, max_len, Kv, hd), dt),
+            "v": jnp.zeros((L, batch_size, max_len, Kv, hd), dt),
+        },
+        "cross": {
+            "k": jnp.zeros((L, batch_size, F, Kv, hd), dt),
+            "v": jnp.zeros((L, batch_size, F, Kv, hd), dt),
+        },
+    }
+
+
+def prefill_cache(params, cfg, cache, audio_embeds):
+    """Run the encoder and fill the cross-attention KV cache."""
+    enc_out = encode(params, cfg, audio_embeds)
+
+    def per_layer(lp):
+        k, v = _cross_kv(lp, cfg, enc_out)
+        return {"k": k, "v": v}
+
+    cross = jax.vmap(per_layer)(params["dec"])
+    return {**cache, "cross": cross}
+
+
+def decode_step(params, cfg, cache, tokens, pos):
+    """One decoder token against cached self/cross KV."""
+    x = C.embed(params["embed"], tokens) * math.sqrt(cfg.d_model)
+    positions = pos[None] if jnp.ndim(pos) == 0 else pos
+
+    def body(x, xs):
+        lp, ck, cv, xk, xv = xs
+        h = C.rmsnorm(lp["ln1"], x, cfg.norm_eps)
+        sa, nc = C.attention_block(lp["self_attn"], cfg, h,
+                                   positions=positions, window=None,
+                                   cache={"k": ck, "v": cv})
+        x = x + sa
+        h = C.rmsnorm(lp["ln_x"], x, cfg.norm_eps)
+        x = x + _cross_attn(lp["cross_attn"], cfg, h, (xk, xv))
+        h = C.rmsnorm(lp["ln2"], x, cfg.norm_eps)
+        x = x + C.mlp_block(lp["mlp"], h)
+        return x, (nc["k"], nc["v"])
+
+    x, (nk, nv) = jax.lax.scan(
+        body, x, (params["dec"], cache["self"]["k"], cache["self"]["v"],
+                  cache["cross"]["k"], cache["cross"]["v"]))
+    x = C.rmsnorm(params["dec_norm"], x, cfg.norm_eps)
+    logits = C.linear(params["lm_head"], x).astype(jnp.float32)
+    return logits, {"self": {"k": nk, "v": nv}, "cross": cache["cross"]}

@@ -1,0 +1,95 @@
+"""Decoder-only language model (dense / MoE / SSM / hybrid / VLM backbone).
+
+VLM (``cfg.num_patches > 0``): the stub vision frontend supplies precomputed
+patch embeddings (``batch["patch_embeds"]``, (B, num_patches, vit_dim)); a
+2-layer MLP projector maps them to d_model and they replace the first
+``num_patches`` positions of the sequence (masked out of the loss).  This is
+the one sanctioned stub — the language backbone is fully implemented.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common as C
+from repro.models import stack as ST
+
+
+def init(key, cfg) -> dict:
+    dt = C.dtype_of(cfg)
+    ks = jax.random.split(key, 4)
+    params = {
+        "embed": C.init_embedding(ks[0], cfg.vocab_size, cfg.d_model, dt),
+        "stack": ST.init_stack(ks[1], cfg),
+        "final_norm": C.init_norm(cfg.d_model, dt),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = C.init_linear(ks[2], cfg.d_model, cfg.vocab_size, dt)
+    if cfg.num_patches:
+        h = cfg.d_model
+        k1, k2 = jax.random.split(ks[3])
+        params["projector"] = {
+            "fc1": C.init_linear(k1, cfg.vit_dim, h, dt),
+            "fc2": C.init_linear(k2, h, h, dt),
+        }
+    return params
+
+
+def _embed_inputs(params, cfg, batch) -> jax.Array:
+    x = C.embed(params["embed"], batch["tokens"])
+    x = x * math.sqrt(cfg.d_model)
+    if cfg.num_patches:
+        pe = batch["patch_embeds"].astype(x.dtype)
+        proj = C.linear(params["projector"]["fc2"],
+                        jax.nn.gelu(C.linear(params["projector"]["fc1"], pe)))
+        x = jnp.concatenate([proj, x[:, cfg.num_patches :]], axis=1)
+    return x
+
+
+def _logits(params, cfg, x) -> jax.Array:
+    x = C.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    if cfg.tie_embeddings:
+        logits = x @ params["embed"]["table"].T
+    else:
+        logits = C.linear(params["lm_head"], x)
+    return C.softcap(logits.astype(jnp.float32), cfg.final_logit_softcap)
+
+
+def forward(params, cfg, batch, *, remat: str = "none") -> jax.Array:
+    """Training/prefill forward: batch['tokens'] (B,S) -> logits (B,S,V)."""
+    x = _embed_inputs(params, cfg, batch)
+    S = x.shape[1]
+    positions = jnp.arange(S)
+    x, _, aux = ST.stack_fwd(params["stack"], cfg, x, positions=positions,
+                             remat=remat)
+    return _logits(params, cfg, x), aux
+
+
+def loss_fn(params, cfg, batch, *, remat: str = "none") -> jax.Array:
+    """Next-token cross-entropy (+ MoE aux); VLM patch positions masked."""
+    logits, aux = forward(params, cfg, batch, remat=remat)
+    labels = batch["labels"]                        # (B,S) next tokens
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    mask = jnp.ones_like(nll)
+    if cfg.num_patches:
+        pos = jnp.arange(nll.shape[1])[None]
+        mask = (pos >= cfg.num_patches).astype(nll.dtype)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0) + aux
+
+
+def init_cache(cfg, batch_size: int, max_len: int) -> dict:
+    return ST.init_stack_cache(cfg, batch_size, max_len)
+
+
+def decode_step(params, cfg, cache, tokens, pos):
+    """One decode step.  tokens (B,1) int32, pos scalar int32.
+    Returns (logits (B,1,V), new_cache)."""
+    x = C.embed(params["embed"], tokens) * math.sqrt(cfg.d_model)
+    positions = pos[None] if jnp.ndim(pos) == 0 else pos
+    x, new_cache, _ = ST.stack_fwd(params["stack"], cfg, x,
+                                   positions=positions, cache=cache)
+    return _logits(params, cfg, x), new_cache

@@ -1,0 +1,53 @@
+"""The paper's MNIST MLP (Table 2): 784-128-128-10, ReLU, softmax output.
+Used by the Byzantine-resilience experiment benchmarks (fig2/fig3/fig4)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.registry import Model
+
+
+def init_mlp_classifier(key, dims=(784, 128, 128, 10)) -> dict:
+    params = {}
+    keys = jax.random.split(key, len(dims) - 1)
+    for i, (din, dout) in enumerate(zip(dims[:-1], dims[1:])):
+        params[f"fc{i + 1}"] = {
+            "w": jax.random.normal(keys[i], (din, dout)) / jnp.sqrt(din),
+            "b": jnp.zeros((dout,)),
+        }
+    return params
+
+
+def mlp_logits(params, x: jax.Array) -> jax.Array:
+    h = x.reshape(x.shape[0], -1)
+    n = len(params)
+    for i in range(1, n + 1):
+        h = h @ params[f"fc{i}"]["w"] + params[f"fc{i}"]["b"]
+        if i < n:
+            h = jax.nn.relu(h)
+    return h
+
+
+def mlp_loss(params, batch) -> jax.Array:
+    logits = mlp_logits(params, batch["x"])
+    logp = jax.nn.log_softmax(logits)
+    return -jnp.mean(jnp.take_along_axis(logp, batch["y"][:, None], 1))
+
+
+def mlp_accuracy(params, batch) -> jax.Array:
+    return jnp.mean(
+        (jnp.argmax(mlp_logits(params, batch["x"]), -1) == batch["y"])
+        .astype(jnp.float32))
+
+
+def build_mlp_model(dims=(784, 128, 128, 10)) -> Model:
+    """Model-API wrapper so the Trainer/benchmarks drive it uniformly."""
+    return Model(
+        cfg=None,
+        init=lambda key: init_mlp_classifier(key, dims),
+        forward=lambda p, b: (mlp_logits(p, b["x"]), jnp.zeros(())),
+        loss=mlp_loss,
+        init_cache=lambda bs, ml: {},
+        decode_step=None,
+    )

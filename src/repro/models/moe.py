@@ -1,0 +1,134 @@
+"""Mixture-of-Experts FFN: top-k routing, sort-based capacity dispatch,
+shared experts, load-balance auxiliary loss.
+
+Dispatch is the TPU-idiomatic sort/segment scheme (no (T,E,C) one-hot
+tensors): assignments are sorted by expert id, positions-within-expert are
+computed from segment offsets, tokens scatter into a dense (E, C, d) buffer
+that feeds two grouped einsums (the MXU path), and results gather back with
+router weights.  Overflow beyond capacity C = ceil(T·k/E · capacity_factor)
+is dropped (standard capacity-based MoE semantics).
+
+Distribution (§Perf P6): when a mesh is active, tokens are pre-grouped by
+data shard so the dispatch scatter/gather stays SHARD-LOCAL (GSPMD lowers a
+cross-shard data-dependent scatter as an all-reduce of the whole expert
+buffer — 100s of GB/layer at kimi scale); the cross-device movement then
+happens inside the well-partitioned grouped einsums against expert-sharded
+weights.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import (data_axis_size, dtype_of, init_linear,
+                                 linear, mlp_block, shard_hint)
+
+_GROUPING = threading.local()
+
+
+@contextlib.contextmanager
+def no_data_grouping():
+    """Disable the P6 data-shard token grouping.  The robust train step wraps
+    its worker-vmap in this: each worker's tokens are already shard-local
+    there, and regrouping would force a cross-shard reshard (measured 2×
+    collective regression on deepseek train — §Perf P6)."""
+    prev = getattr(_GROUPING, "off", False)
+    _GROUPING.off = True
+    try:
+        yield
+    finally:
+        _GROUPING.off = prev
+
+
+def _grouping_enabled() -> bool:
+    return not getattr(_GROUPING, "off", False)
+
+
+def init_moe(key, cfg) -> dict:
+    dt = dtype_of(cfg)
+    d, f, E = cfg.d_model, cfg.d_ff, cfg.num_experts
+    ks = jax.random.split(key, 5)
+    scale = 1.0 / jnp.sqrt(d)
+    params = {
+        "router": init_linear(ks[0], d, E, jnp.float32),
+        "moe_wi": (scale * jax.random.normal(ks[1], (E, d, f))).astype(dt),
+        "moe_wg": (scale * jax.random.normal(ks[2], (E, d, f))).astype(dt),
+        "moe_wo": ((1.0 / jnp.sqrt(f)) * jax.random.normal(ks[3], (E, f, d))).astype(dt),
+    }
+    if cfg.num_shared_experts:
+        from repro.models.common import init_mlp
+        params["shared"] = init_mlp(ks[4], cfg,
+                                    d_ff=cfg.d_ff * cfg.num_shared_experts)
+    return params
+
+
+def _moe_ffn(p, cfg, xt: jax.Array):
+    """Routed-expert FFN over a flat token group.  xt: (T, d) ->
+    ((T, d), aux scalar)."""
+    T, d = xt.shape
+    E, k = cfg.num_experts, cfg.num_experts_per_tok
+
+    logits = linear(p["router"], xt.astype(jnp.float32))      # (T,E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, eids = jax.lax.top_k(probs, k)                      # (T,k)
+    gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+
+    # ---- sort-based dispatch ----
+    cap = int(-(-T * k // E) * cfg.capacity_factor) + 1       # C per expert
+    flat_e = eids.reshape(-1)                                 # (T*k,)
+    tok_of = jnp.repeat(jnp.arange(T), k)                     # (T*k,)
+    order = jnp.argsort(flat_e)                               # stable
+    se, st = flat_e[order], tok_of[order]
+    counts = jnp.bincount(se, length=E)                       # (E,)
+
+    # Load-balance aux loss (Switch-style): E * sum_e f_e * p_e, with f_e the
+    # fraction of assignments routed to e (from `counts`, no (T,E) one-hot).
+    me = jnp.mean(probs, axis=0)                              # (E,)
+    fe = counts.astype(jnp.float32) / (T * k)
+    aux = cfg.router_aux_loss_coef * E * jnp.sum(me * fe)
+
+    starts = jnp.concatenate([jnp.zeros((1,), counts.dtype),
+                              jnp.cumsum(counts)[:-1]])
+    pos = jnp.arange(T * k) - starts[se]                      # (T*k,)
+    keep = pos < cap
+    slot = jnp.where(keep, pos, cap)                          # overflow slot
+
+    buf = jnp.zeros((E, cap + 1, d), xt.dtype)
+    buf = buf.at[se, slot].add(xt[st])                        # local scatter
+
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, p["moe_wg"])) \
+        * jnp.einsum("ecd,edf->ecf", buf, p["moe_wi"])
+    y = jnp.einsum("ecf,efd->ecd", h, p["moe_wo"])            # (E,cap+1,d)
+
+    # ---- gather back with router weights ----
+    gathered = y[se, slot]                                    # (T*k, d)
+    gathered = jnp.where(keep[:, None], gathered, 0.0)
+    w_sorted = gate.reshape(-1)[order]
+    out = jnp.zeros((T, d), y.dtype).at[st].add(
+        gathered * w_sorted[:, None].astype(y.dtype))
+    return out, aux
+
+
+def moe_block(p, cfg, x: jax.Array):
+    """x: (B,S,d) -> (out (B,S,d), aux_loss scalar)."""
+    B, S, d = x.shape
+    T = B * S
+    xt = x.reshape(T, d)
+
+    g = data_axis_size() if _grouping_enabled() else 0
+    if g > 1 and T % g == 0 and T // g >= cfg.num_experts_per_tok:
+        # group by data shard: dispatch scatter/gather stays shard-local,
+        # capacity applies per group (same drop semantics at uniform load)
+        xg = shard_hint(xt.reshape(g, T // g, d), ("data", None, None))
+        out, aux = jax.vmap(lambda q: _moe_ffn(p, cfg, q))(xg)
+        out = shard_hint(out, ("data", None, None)).reshape(T, d)
+        aux = jnp.mean(aux)
+    else:
+        out, aux = _moe_ffn(p, cfg, xt)
+
+    if "shared" in p:
+        out = out + mlp_block(p["shared"], xt)
+    return out.reshape(B, S, d), aux

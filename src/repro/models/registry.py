@@ -1,0 +1,75 @@
+"""Model registry: uniform API over all families.
+
+``build_model(cfg)`` returns a `Model` whose methods close over the config:
+  init(key) -> params
+  forward(params, batch) -> (logits, aux)
+  loss(params, batch) -> scalar
+  init_cache(batch_size, max_len) -> cache
+  decode_step(params, cache, tokens, pos) -> (logits, cache)
+  input_specs(shape) -> ShapeDtypeStruct batch stand-ins (see launch.dryrun)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, InputShape
+from repro.models import encdec, lm
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ArchConfig
+    init: Callable
+    forward: Callable
+    loss: Callable
+    init_cache: Callable
+    decode_step: Callable
+
+    def input_specs(self, shape: InputShape, *, global_batch: int = None,
+                    for_decode: bool = None) -> Dict[str, Any]:
+        """ShapeDtypeStruct stand-ins for every model input (the modality
+        frontends' outputs included — the sanctioned stub)."""
+        B = global_batch if global_batch is not None else shape.global_batch
+        S = shape.seq_len
+        decode = shape.is_decode if for_decode is None else for_decode
+        i32 = jnp.int32
+        if decode:
+            specs = {"tokens": jax.ShapeDtypeStruct((B, 1), i32)}
+            return specs
+        specs = {
+            "tokens": jax.ShapeDtypeStruct((B, S), i32),
+            "labels": jax.ShapeDtypeStruct((B, S), i32),
+        }
+        if self.cfg.num_patches:
+            specs["patch_embeds"] = jax.ShapeDtypeStruct(
+                (B, self.cfg.num_patches, self.cfg.vit_dim), jnp.float32)
+        if self.cfg.is_encdec:
+            specs["audio_embeds"] = jax.ShapeDtypeStruct(
+                (B, self.cfg.encoder_seq_len, self.cfg.frontend_dim),
+                jnp.float32)
+        return specs
+
+
+def build_model(cfg: ArchConfig, *, remat: str = "none") -> Model:
+    if cfg.is_encdec:
+        return Model(
+            cfg=cfg,
+            init=lambda key: encdec.init(key, cfg),
+            forward=lambda p, b: encdec.forward(p, cfg, b, remat=remat),
+            loss=lambda p, b: encdec.loss_fn(p, cfg, b, remat=remat),
+            init_cache=lambda bs, ml: encdec.init_cache(cfg, bs, ml),
+            decode_step=lambda p, c, t, pos: encdec.decode_step(p, cfg, c, t,
+                                                                pos),
+        )
+    return Model(
+        cfg=cfg,
+        init=lambda key: lm.init(key, cfg),
+        forward=lambda p, b: lm.forward(p, cfg, b, remat=remat),
+        loss=lambda p, b: lm.loss_fn(p, cfg, b, remat=remat),
+        init_cache=lambda bs, ml: lm.init_cache(cfg, bs, ml),
+        decode_step=lambda p, c, t, pos: lm.decode_step(p, cfg, c, t, pos),
+    )

@@ -1,0 +1,174 @@
+"""Mamba2 SSD (state-space duality) block — pure JAX, chunked algorithm.
+
+Training/prefill uses the quadratic-within-chunk / linear-across-chunks SSD
+decomposition (Dao & Gu 2024, §6): all chunk-local work is batched matmuls
+(MXU friendly) and the cross-chunk recurrence is a tiny scan-free cumulative
+product over num_chunks.  Decode uses the O(1) recurrent state update.
+
+Shapes: x (B,S,d_model); internal heads H = d_inner/head_dim, state N,
+head dim P; B/C projections are shared across heads (ngroups=1).
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import dtype_of, init_linear, linear, rmsnorm
+
+SSD_CHUNK = 256
+
+
+def _dims(cfg):
+    d_inner = cfg.ssm_expand * cfg.d_model
+    nheads = d_inner // cfg.ssm_head_dim
+    return d_inner, nheads
+
+
+def init_mamba(key, cfg) -> dict:
+    dt = dtype_of(cfg)
+    d, n, w = cfg.d_model, cfg.ssm_state, cfg.ssm_conv_width
+    d_inner, nheads = _dims(cfg)
+    conv_ch = d_inner + 2 * n
+    ks = jax.random.split(key, 5)
+    d_in_proj = 2 * d_inner + 2 * n + nheads          # z, x, B, C, dt
+    return {
+        "in_proj": init_linear(ks[0], d, d_in_proj, dt),
+        "conv_w": (jax.random.normal(ks[1], (w, conv_ch)) / math.sqrt(w)).astype(dt),
+        "conv_b": jnp.zeros((conv_ch,), dt),
+        "dt_bias": jnp.full((nheads,), math.log(math.expm1(0.01)), jnp.float32),
+        "A_log": jnp.log(1.0 + 15.0 * jax.random.uniform(ks[2], (nheads,),
+                                                         jnp.float32)),
+        "D": jnp.ones((nheads,), jnp.float32),
+        "norm": {"scale": jnp.ones((d_inner,), dt)},
+        "out_proj": init_linear(ks[3], d_inner, d, dt),
+    }
+
+
+def init_mamba_cache(cfg, batch: int) -> dict:
+    dt = jnp.float32
+    d_inner, nheads = _dims(cfg)
+    conv_ch = d_inner + 2 * cfg.ssm_state
+    return {
+        "conv": jnp.zeros((batch, cfg.ssm_conv_width - 1, conv_ch),
+                          dtype_of(cfg)),
+        "ssm": jnp.zeros((batch, nheads, cfg.ssm_head_dim, cfg.ssm_state), dt),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv via width-many shifted adds.  x: (B,S,C)."""
+    width = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (width - 1, 0), (0, 0)))
+    out = sum(pad[:, i : i + x.shape[1]] * w[i] for i in range(width))
+    return jax.nn.silu(out + b)
+
+
+def _segsum(a: jax.Array) -> jax.Array:
+    """a: (..., T) -> (..., T, T) with out[i,j] = sum a[j+1..i], -inf above diag."""
+    T = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((T, T), bool))
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(xbar, dA, B, C, *, chunk=SSD_CHUNK, init_state=None):
+    """Chunked SSD. xbar: (b,S,h,p) dt-scaled inputs; dA: (b,S,h); B/C: (b,S,n).
+
+    Returns (y (b,S,h,p), final_state (b,h,p,n)).  f32 throughout.
+    """
+    b, S, h, p = xbar.shape
+    n = B.shape[-1]
+    if S % chunk:
+        chunk = S                                      # degenerate: one chunk
+    nc = S // chunk
+    xc = xbar.reshape(b, nc, chunk, h, p).astype(jnp.float32)
+    Ac = dA.reshape(b, nc, chunk, h).transpose(0, 3, 1, 2)  # (b,h,nc,cs)
+    Bc = B.reshape(b, nc, chunk, n).astype(jnp.float32)
+    Cc = C.reshape(b, nc, chunk, n).astype(jnp.float32)
+
+    A_cum = jnp.cumsum(Ac, axis=-1)                    # (b,h,nc,cs)
+
+    # 1. intra-chunk (diagonal blocks)
+    L = jnp.exp(_segsum(Ac))                           # (b,h,nc,cs,cs)
+    G = jnp.einsum("bcln,bcsn->bcls", Cc, Bc)          # (b,nc,cs,cs)
+    M = G[:, None] * L.transpose(0, 1, 2, 3, 4)        # (b,h,nc,cs,cs)
+    Y_diag = jnp.einsum("bhcls,bcshp->bclhp", M, xc)
+
+    # 2. per-chunk final states (no carry-in)
+    decay_states = jnp.exp(A_cum[..., -1:] - A_cum)    # (b,h,nc,cs)
+    states = jnp.einsum("bcsn,bhcs,bcshp->bchpn", Bc, decay_states, xc)
+
+    # 3. cross-chunk recurrence
+    if init_state is None:
+        init_state = jnp.zeros((b, h, p, n), jnp.float32)
+    states = jnp.concatenate([init_state[:, None], states], axis=1)  # (b,nc+1,...)
+    chunk_sum = A_cum[..., -1]                         # (b,h,nc)
+    decay_chunk = jnp.exp(_segsum(jnp.pad(chunk_sum, ((0, 0), (0, 0), (1, 0)))))
+    new_states = jnp.einsum("bhzc,bchpn->bzhpn", decay_chunk, states)
+    states_in, final_state = new_states[:, :-1], new_states[:, -1]
+
+    # 4. state -> output contribution
+    state_decay = jnp.exp(A_cum)                       # (b,h,nc,cs)
+    Y_off = jnp.einsum("bcln,bchpn,bhcl->bclhp", Cc, states_in, state_decay)
+
+    y = (Y_diag + Y_off).reshape(b, S, h, p)
+    return y, final_state
+
+
+def mamba_block(p, cfg, x, *, positions=None, cache: Optional[dict] = None,
+                window=None):
+    """Mamba2 block.  Training/prefill when cache is None; decode (S==1)
+    otherwise.  Returns (out (B,S,d), new_cache)."""
+    del positions, window
+    B_, S, d = x.shape
+    n, width = cfg.ssm_state, cfg.ssm_conv_width
+    d_inner, nheads = _dims(cfg)
+    hp = cfg.ssm_head_dim
+
+    zxbcdt = linear(p["in_proj"], x)
+    z = zxbcdt[..., :d_inner]
+    xbc = zxbcdt[..., d_inner : 2 * d_inner + 2 * n]
+    dt_raw = zxbcdt[..., 2 * d_inner + 2 * n :]        # (B,S,nheads)
+
+    new_cache = None
+    if cache is None:
+        xbc = _causal_conv(xbc, p["conv_w"], p["conv_b"])
+    else:
+        # decode: conv over [state, x_t]
+        hist = jnp.concatenate([cache["conv"], xbc], axis=1)  # (B,width,C)
+        out = sum(hist[:, i : i + 1] * p["conv_w"][i] for i in range(width))
+        xbc = jax.nn.silu(out + p["conv_b"])
+        new_conv = hist[:, 1:]
+
+    xin = xbc[..., :d_inner].reshape(B_, S, nheads, hp)
+    Bp = xbc[..., d_inner : d_inner + n]
+    Cp = xbc[..., d_inner + n :]
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])  # (B,S,h)
+    A = -jnp.exp(p["A_log"])                           # (h,)
+    dA = dt * A                                        # (B,S,h)
+    xbar = xin.astype(jnp.float32) * dt[..., None]
+
+    if cache is None:
+        y, _ = ssd_chunked(xbar, dA, Bp, Cp)
+    else:
+        # recurrent step: state <- exp(dA)*state + xbar ⊗ B ; y = C·state
+        state = cache["ssm"]
+        dA1 = dA[:, 0]                                 # (B,h)
+        xb1 = xbar[:, 0]                               # (B,h,p)
+        Bn = Bp[:, 0].astype(jnp.float32)              # (B,n)
+        Cn = Cp[:, 0].astype(jnp.float32)
+        state = (jnp.exp(dA1)[..., None, None] * state
+                 + jnp.einsum("bhp,bn->bhpn", xb1, Bn))
+        y = jnp.einsum("bhpn,bn->bhp", state, Cn)[:, None]  # (B,1,h,p)
+        new_cache = {"conv": new_conv, "ssm": state}
+
+    y = y + p["D"][:, None] * xin.astype(jnp.float32)
+    y = y.reshape(B_, S, d_inner)
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    y = rmsnorm(p["norm"], y.astype(x.dtype), cfg.norm_eps)
+    return linear(p["out_proj"], y), new_cache

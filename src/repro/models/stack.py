@@ -1,0 +1,202 @@
+"""Generic decoder-only stack: period-grouped ``lax.scan`` over layers with
+pluggable mixers (GQA / MLA / Mamba2-SSD / hybrid) and FFNs (dense GLU / MoE).
+
+Layer windows follow ``cfg.window_pattern`` (e.g. gemma3's 5×local:1×global).
+The stack scans over *periods* — one pattern repetition per step, layers
+inside a period unrolled so each position keeps its static window — with the
+remainder layers unrolled as a tail.  This keeps the HLO small (one scan body)
+while allowing heterogeneous per-layer KV-cache shapes (ring buffers for
+windowed layers, full-length for global ones): essential for long_500k.
+"""
+from __future__ import annotations
+
+import os
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common as C
+from repro.models import moe as M
+from repro.models import ssm as S
+
+# §Perf P9 (opt-in): Megatron-SP-style sequence sharding of the residual
+# stream between layers — GSPMD then converts per-layer activation
+# all-reduces into all-gather + reduce-scatter pairs and runs norms/
+# residual adds 1/model_size.
+SEQ_SHARD = os.environ.get("REPRO_SEQ_SHARD", "0") == "1"
+
+
+# ---------------------------------------------------------------------------
+# Single layer
+# ---------------------------------------------------------------------------
+
+def init_layer(key, cfg) -> dict:
+    dt = C.dtype_of(cfg)
+    ks = jax.random.split(key, 4)
+    p = {"ln1": C.init_norm(cfg.d_model, dt)}
+    if cfg.is_ssm:
+        p["mixer"] = S.init_mamba(ks[0], cfg)
+        return p                                  # mamba2: block IS the layer
+    if cfg.hybrid:
+        p["mixer"] = C.init_attention(ks[0], cfg)
+        p["mixer_ssm"] = S.init_mamba(ks[3], cfg)
+        p["branch_norm_a"] = C.init_norm(cfg.d_model, dt)
+        p["branch_norm_s"] = C.init_norm(cfg.d_model, dt)
+    elif cfg.use_mla:
+        p["mixer"] = C.init_mla(ks[0], cfg)
+    else:
+        p["mixer"] = C.init_attention(ks[0], cfg)
+    p["ln2"] = C.init_norm(cfg.d_model, dt)
+    p["ffn"] = M.init_moe(ks[1], cfg) if cfg.is_moe else C.init_mlp(ks[1], cfg)
+    if cfg.use_post_norms:
+        p["post_ln1"] = C.init_norm(cfg.d_model, dt)
+        p["post_ln2"] = C.init_norm(cfg.d_model, dt)
+    return p
+
+
+def init_layer_cache(cfg, batch: int, max_len: int, window) -> dict:
+    if cfg.is_ssm:
+        return {"mixer": S.init_mamba_cache(cfg, batch)}
+    cache = {}
+    if cfg.hybrid:
+        cache["mixer"] = C.init_attn_cache(cfg, batch, max_len, window)
+        cache["mixer_ssm"] = S.init_mamba_cache(cfg, batch)
+    elif cfg.use_mla:
+        cache["mixer"] = C.init_mla_cache(cfg, batch, max_len)
+    else:
+        cache["mixer"] = C.init_attn_cache(cfg, batch, max_len, window)
+    return cache
+
+
+def layer_fwd(p, cfg, x, *, window, positions, cache=None):
+    """Returns (x, new_cache, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    h = C.rmsnorm(p["ln1"], x, cfg.norm_eps)
+    c = cache or {}
+    if cfg.is_ssm:
+        mix, nc = S.mamba_block(p["mixer"], cfg, h, cache=c.get("mixer"))
+        return x + mix, ({"mixer": nc} if cache is not None else None), aux
+    if cfg.hybrid:
+        attn, nca = C.attention_block(p["mixer"], cfg, h, positions=positions,
+                                      window=window, cache=c.get("mixer"))
+        ssm, ncs = S.mamba_block(p["mixer_ssm"], cfg, h,
+                                 cache=c.get("mixer_ssm"))
+        mix = 0.5 * (C.rmsnorm(p["branch_norm_a"], attn, cfg.norm_eps)
+                     + C.rmsnorm(p["branch_norm_s"], ssm, cfg.norm_eps))
+        new_cache = ({"mixer": nca, "mixer_ssm": ncs}
+                     if cache is not None else None)
+    elif cfg.use_mla:
+        mix, nc = C.mla_block(p["mixer"], cfg, h, positions=positions,
+                              cache=c.get("mixer"))
+        new_cache = {"mixer": nc} if cache is not None else None
+    else:
+        mix, nc = C.attention_block(p["mixer"], cfg, h, positions=positions,
+                                    window=window, cache=c.get("mixer"))
+        new_cache = {"mixer": nc} if cache is not None else None
+    if cfg.use_post_norms:
+        mix = C.rmsnorm(p["post_ln1"], mix, cfg.norm_eps)
+    x = x + mix
+
+    h = C.rmsnorm(p["ln2"], x, cfg.norm_eps)
+    if cfg.is_moe:
+        f, aux = M.moe_block(p["ffn"], cfg, h)
+    else:
+        f = C.mlp_block(p["ffn"], h)
+    if cfg.use_post_norms:
+        f = C.rmsnorm(p["post_ln2"], f, cfg.norm_eps)
+    return x + f, new_cache, aux
+
+
+# ---------------------------------------------------------------------------
+# Stack: periods + tail
+# ---------------------------------------------------------------------------
+
+def _period_geometry(cfg):
+    windows = cfg.layer_windows()
+    P = max(len(cfg.window_pattern), 1)
+    n_periods, tail = divmod(cfg.num_layers, P)
+    return windows, P, n_periods, tail
+
+
+def init_stack(key, cfg) -> dict:
+    windows, P, n_periods, tail = _period_geometry(cfg)
+    keys = jax.random.split(key, n_periods * P + tail)
+
+    def init_period(ks):
+        return {f"l{j}": init_layer(ks[j], cfg) for j in range(P)}
+
+    blocks = jax.vmap(init_period)(
+        keys[: n_periods * P].reshape(n_periods, P, -1))
+    params = {"blocks": blocks}
+    for j in range(tail):
+        params[f"tail{j}"] = init_layer(keys[n_periods * P + j], cfg)
+    return params
+
+
+def init_stack_cache(cfg, batch: int, max_len: int) -> dict:
+    windows, P, n_periods, tail = _period_geometry(cfg)
+
+    def stackify(tree):
+        return jax.tree.map(
+            lambda x: jnp.zeros((n_periods,) + x.shape, x.dtype), tree)
+
+    cache = {"blocks": {
+        f"l{j}": stackify(init_layer_cache(cfg, batch, max_len, windows[j]))
+        for j in range(P)}}
+    for j in range(tail):
+        cache[f"tail{j}"] = init_layer_cache(cfg, batch, max_len,
+                                             windows[n_periods * P + j])
+    return cache
+
+
+def stack_fwd(params, cfg, x, *, positions, cache=None, remat: str = "none"):
+    """Apply the full layer stack.  Returns (x, new_cache, aux_total)."""
+    windows, P, n_periods, tail = _period_geometry(cfg)
+    has_cache = cache is not None
+
+    def period_body(carry, xs):
+        x = carry
+        blk_p, blk_c = xs if has_cache else (xs, {})
+        new_c, aux = {}, jnp.zeros((), jnp.float32)
+        for j in range(P):
+            x, nc, a = layer_fwd(blk_p[f"l{j}"], cfg, x, window=windows[j],
+                                 positions=positions,
+                                 cache=blk_c.get(f"l{j}") if has_cache else None)
+            if SEQ_SHARD and not has_cache and x.shape[1] > 1:
+                x = C.shard_hint(x, (None, "model", None))
+            if has_cache:
+                new_c[f"l{j}"] = nc
+            aux = aux + a
+        return x, (new_c, aux) if has_cache else aux
+
+    body = period_body
+    if remat == "full":
+        body = jax.checkpoint(period_body)
+    elif remat == "dots":
+        body = jax.checkpoint(
+            period_body,
+            policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+
+    xs = (params["blocks"], cache["blocks"]) if has_cache else params["blocks"]
+    if n_periods > 0:
+        x, ys = jax.lax.scan(body, x, xs)
+    else:
+        ys = ({}, jnp.zeros((0,), jnp.float32)) if has_cache \
+            else jnp.zeros((0,), jnp.float32)
+    if has_cache:
+        new_blocks, auxs = ys if n_periods > 0 else ({}, ys[1])
+    else:
+        new_blocks, auxs = None, ys
+    aux_total = jnp.sum(auxs)
+
+    new_cache = {"blocks": new_blocks} if has_cache else None
+    for j in range(tail):
+        w = windows[n_periods * P + j]
+        x, nc, a = layer_fwd(params[f"tail{j}"], cfg, x, window=w,
+                             positions=positions,
+                             cache=cache.get(f"tail{j}") if has_cache else None)
+        if has_cache:
+            new_cache[f"tail{j}"] = nc
+        aux_total = aux_total + a
+    return x, new_cache, aux_total

@@ -1,0 +1,93 @@
+"""Optimizers as pure pytree transforms (no optax dependency).
+
+The paper trains with plain SGD; momentum/Adam/AdamW are beyond-paper
+extensions that compose with the robust aggregation (the robust rule replaces
+the gradient *estimate*, everything downstream is unchanged — Theorems 3-4
+only require the Δ bound on the aggregate).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Union
+
+import jax
+import jax.numpy as jnp
+
+Schedule = Union[float, Callable[[jax.Array], jax.Array]]
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    name: str = "sgd"                 # sgd | momentum | adam | adamw
+    lr: Schedule = 0.1                # paper default for MNIST MLP
+    momentum: float = 0.9
+    beta1: float = 0.9
+    beta2: float = 0.999
+    eps: float = 1e-8
+    weight_decay: float = 0.0
+    grad_clip: float = 0.0            # 0 = off
+
+    def lr_at(self, step) -> jax.Array:
+        if callable(self.lr):
+            return jnp.asarray(self.lr(step), jnp.float32)
+        return jnp.asarray(self.lr, jnp.float32)
+
+
+def init_opt_state(cfg: OptConfig, params):
+    zeros = lambda: jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)
+    state = {"step": jnp.zeros((), jnp.int32)}
+    if cfg.name == "momentum":
+        state["mu"] = zeros()
+    elif cfg.name in ("adam", "adamw"):
+        state["mu"] = zeros()
+        state["nu"] = zeros()
+    elif cfg.name != "sgd":
+        raise ValueError(f"unknown optimizer {cfg.name!r}")
+    return state
+
+
+def _clip(cfg: OptConfig, grads):
+    if not cfg.grad_clip:
+        return grads
+    gn = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                      for g in jax.tree.leaves(grads)))
+    scale = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gn, 1e-12))
+    return jax.tree.map(lambda g: g * scale.astype(g.dtype), grads)
+
+
+def apply_updates(cfg: OptConfig, params, grads, state):
+    """Returns (new_params, new_state)."""
+    step = state["step"] + 1
+    lr = cfg.lr_at(step)
+    grads = _clip(cfg, grads)
+    f32 = lambda t: jax.tree.map(lambda x: x.astype(jnp.float32), t)
+
+    if cfg.name == "sgd":
+        upd = f32(grads)
+        new_state = {"step": step}
+    elif cfg.name == "momentum":
+        mu = jax.tree.map(lambda m, g: cfg.momentum * m + g.astype(jnp.float32),
+                          state["mu"], grads)
+        upd = mu
+        new_state = {"step": step, "mu": mu}
+    else:                                           # adam / adamw
+        mu = jax.tree.map(
+            lambda m, g: cfg.beta1 * m + (1 - cfg.beta1) * g.astype(jnp.float32),
+            state["mu"], grads)
+        nu = jax.tree.map(
+            lambda v, g: cfg.beta2 * v
+            + (1 - cfg.beta2) * jnp.square(g.astype(jnp.float32)),
+            state["nu"], grads)
+        bc1 = 1 - cfg.beta1 ** step.astype(jnp.float32)
+        bc2 = 1 - cfg.beta2 ** step.astype(jnp.float32)
+        upd = jax.tree.map(
+            lambda m, v: (m / bc1) / (jnp.sqrt(v / bc2) + cfg.eps), mu, nu)
+        new_state = {"step": step, "mu": mu, "nu": nu}
+
+    def upd_leaf(p, u):
+        u = u * lr
+        if cfg.name == "adamw" and cfg.weight_decay and p.ndim >= 2:
+            u = u + lr * cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - u).astype(p.dtype)
+
+    return jax.tree.map(upd_leaf, params, upd), new_state

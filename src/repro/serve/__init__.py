@@ -1,0 +1,1 @@
+from repro.serve.engine import make_serve_step, generate  # noqa: F401

@@ -1,0 +1,43 @@
+"""Serving runtime: jitted single-token decode step + batched greedy
+generation loop over the KV cache."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh
+
+
+def make_serve_step(model, *, mesh: Optional[Mesh] = None, donate=True):
+    """Returns ``serve_step(params, cache, tokens, pos) -> (next_tokens,
+    logits, new_cache)`` — one new token per request against the cache."""
+
+    def serve_step(params, cache, tokens, pos):
+        logits, cache = model.decode_step(params, cache, tokens, pos)
+        next_tokens = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        return next_tokens[:, None], logits, cache
+
+    return jax.jit(serve_step, donate_argnums=(1,) if donate else ())
+
+
+def generate(model, params, prompts: jax.Array, max_new_tokens: int,
+             *, max_len: Optional[int] = None):
+    """Greedy batched generation.  prompts: (B, S0) int32.
+    Prefills by stepping the prompt token-by-token (decode-path prefill),
+    then samples greedily.  Returns (B, S0 + max_new_tokens)."""
+    B, S0 = prompts.shape
+    total = S0 + max_new_tokens if max_len is None else max_len
+    cache = model.init_cache(B, total)
+    step = make_serve_step(model, donate=False)
+
+    toks = prompts
+    nxt = prompts[:, :1]
+    for t in range(total - 1):
+        cur = toks[:, t : t + 1] if t < S0 else nxt
+        nxt, _, cache = step(params, cache, cur, jnp.int32(t))
+        if t >= S0 - 1:
+            toks = jnp.concatenate([toks, nxt], axis=1)
+        if toks.shape[1] >= total:
+            break
+    return toks

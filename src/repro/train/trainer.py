@@ -1,0 +1,76 @@
+"""Training loop driver: data -> worker batches -> robust step -> metrics,
+with periodic checkpointing.  Used by the examples and the paper-repro
+benchmarks (laptop scale); the same step function scales to the production
+mesh via launch/train.py."""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.robust import RobustConfig
+from repro.data.pipeline import make_worker_batches
+from repro.optim.optimizers import OptConfig
+from repro.train.step import make_train_step
+
+
+@dataclasses.dataclass
+class TrainerConfig:
+    num_workers: int = 20             # paper: m = 20
+    steps: int = 500
+    log_every: int = 50
+    seed: int = 0
+    checkpoint_path: Optional[str] = None
+    checkpoint_every: int = 0
+
+
+class Trainer:
+    def __init__(self, model, batch_fn: Callable[[int], dict],
+                 tcfg: TrainerConfig, robust_cfg: RobustConfig,
+                 opt_cfg: OptConfig, mesh=None,
+                 eval_fn: Optional[Callable] = None):
+        self.model = model
+        self.batch_fn = batch_fn
+        self.tcfg = tcfg
+        self.eval_fn = eval_fn
+        self.step_fn = make_train_step(
+            model, robust_cfg=robust_cfg, opt_cfg=opt_cfg,
+            num_workers=tcfg.num_workers, mesh=mesh, donate=False)
+        key = jax.random.PRNGKey(tcfg.seed)
+        self.params = model.init(key)
+        from repro.optim.optimizers import init_opt_state
+        self.opt_state = init_opt_state(opt_cfg, self.params)
+        self.history: list = []
+
+    def run(self, verbose: bool = True) -> list:
+        key = jax.random.PRNGKey(self.tcfg.seed + 1)
+        t0 = time.time()
+        for step in range(self.tcfg.steps):
+            batch = make_worker_batches(self.batch_fn(step),
+                                        self.tcfg.num_workers)
+            key, sk = jax.random.split(key)
+            self.params, self.opt_state, metrics = self.step_fn(
+                self.params, self.opt_state, batch, sk)
+            if step % self.tcfg.log_every == 0 or step == self.tcfg.steps - 1:
+                rec = {"step": step, "loss": float(metrics["loss"]),
+                       "grad_norm": float(metrics["grad_norm"]),
+                       "wall": time.time() - t0}
+                if self.eval_fn is not None:
+                    rec["eval"] = float(self.eval_fn(self.params))
+                self.history.append(rec)
+                if verbose:
+                    msg = (f"step {step:5d}  loss {rec['loss']:.4f}  "
+                           f"gnorm {rec['grad_norm']:.3e}")
+                    if "eval" in rec:
+                        msg += f"  eval {rec['eval']:.4f}"
+                    print(msg, flush=True)
+            if (self.tcfg.checkpoint_path and self.tcfg.checkpoint_every
+                    and step and step % self.tcfg.checkpoint_every == 0):
+                from repro.checkpoint.io import save_checkpoint
+                save_checkpoint(self.tcfg.checkpoint_path,
+                                {"params": self.params,
+                                 "opt": self.opt_state}, step=step)
+        return self.history

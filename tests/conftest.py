@@ -1,0 +1,6 @@
+# NOTE: deliberately NO --xla_force_host_platform_device_count here — smoke
+# tests and benches must see 1 device.  Multi-device tests spawn subprocesses
+# with their own XLA_FLAGS (see tests/test_distributed.py).
+import jax
+
+jax.config.update("jax_enable_x64", False)

@@ -1,0 +1,53 @@
+"""Asynchronous Byzantine-resilient SGD (paper future work, §7):
+staleness + dimensional attacks, Phocas survives where Mean fails."""
+import jax
+import numpy as np
+import pytest
+
+from repro.core import AttackConfig, RobustConfig
+from repro.data import ClassificationData
+from repro.models.mlp import build_mlp_model, mlp_accuracy
+from repro.optim import OptConfig
+from repro.train.async_sgd import AsyncConfig, run_async_training
+
+M, DIM = 20, 64
+
+
+def _run(rule, attack, staleness=4, steps=60, b=6):
+    data = ClassificationData(num_classes=10, dim=DIM, noise=0.8, seed=1)
+    model = build_mlp_model(dims=(DIM, 64, 10))
+    rob = RobustConfig(rule=rule, b=b, q=b, attack=attack)
+    acfg = AsyncConfig(num_workers=M, staleness=staleness)
+    test = data.test_set(1024)
+    hist = run_async_training(
+        model, lambda i: data.batch(i, 20 * M), rob,
+        OptConfig(name="sgd", lr=0.1), acfg, steps,
+        eval_fn=lambda p: mlp_accuracy(p, test))
+    return hist[-1]["eval"]
+
+
+def test_async_clean_converges_despite_staleness():
+    acc = _run("mean", AttackConfig(name="none"), staleness=6)
+    assert acc > 0.9, acc
+
+
+def test_async_phocas_survives_bitflip():
+    attack = AttackConfig(name="bitflip", num_byzantine=1)
+    acc_phocas = _run("phocas", attack, b=8)
+    acc_mean = _run("mean", attack, b=8, steps=30)
+    assert acc_phocas > 0.85, acc_phocas
+    assert acc_mean < 0.5 or not np.isfinite(acc_mean), acc_mean
+
+
+def test_async_trmean_survives_omniscient():
+    attack = AttackConfig(name="omniscient", num_byzantine=6)
+    acc = _run("trmean", attack)
+    assert acc > 0.8, acc
+
+
+@pytest.mark.parametrize("staleness", [1, 8])
+def test_async_staleness_degrades_gracefully(staleness):
+    """More staleness = slower but still-converging robust training."""
+    acc = _run("phocas", AttackConfig(name="gaussian", num_byzantine=6),
+               staleness=staleness)
+    assert acc > 0.75, (staleness, acc)

@@ -1,0 +1,74 @@
+"""Attack-suite tests (paper §5 adversaries)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import attacks as A
+
+KEY = jax.random.PRNGKey(7)
+
+
+def test_gaussian_replaces_q_rows():
+    u = jnp.ones((20, 64))
+    out = A.gaussian_attack(KEY, u, q=6, std=200.0)
+    assert not np.allclose(out[:6], 1.0)
+    np.testing.assert_allclose(out[6:], 1.0)
+    assert float(jnp.std(out[:6])) > 50.0     # std-200 noise
+
+
+def test_omniscient_negative_sum():
+    u = jnp.ones((10, 8))
+    out = A.omniscient_attack(KEY, u, q=3, scale=1e20)
+    np.testing.assert_allclose(out[0], -1e20 * 7 * np.ones(8))
+    np.testing.assert_allclose(out[3:], 1.0)
+
+
+def test_bitflip_exact_bits():
+    # Bits 22,30,31,32 (1-indexed from LSB): mantissa-21, exponent 29/30, sign
+    x = jnp.full((1, 1), 1.0, jnp.float32)
+    out = A._flip_bits_f32(x, (22, 30, 31, 32))
+    xi = np.asarray(jax.lax.bitcast_convert_type(x, jnp.uint32))[0, 0]
+    oi = np.asarray(jax.lax.bitcast_convert_type(out, jnp.uint32))[0, 0]
+    assert xi ^ oi == (1 << 21) | (1 << 29) | (1 << 30) | (1 << 31)
+    # the corruption is destructive (sign + high exponent)
+    assert float(out[0, 0]) < -1e18
+    # flipping twice restores
+    back = A._flip_bits_f32(out, (22, 30, 31, 32))
+    np.testing.assert_allclose(back, x)
+
+
+def test_bitflip_q_per_dimension():
+    m, d, q, nd = 20, 500, 1, 100
+    u = jax.random.normal(KEY, (m, d))
+    out = A.bitflip_attack(KEY, u, q=q, num_dims=nd)
+    changed = np.asarray(out != u)
+    assert (changed[:, :nd].sum(0) == q).all()   # exactly q per attacked dim
+    assert not changed[:, nd:].any()              # rest untouched
+
+
+def test_gambler_hits_one_server_slice():
+    m, d, servers = 20, 2000, 20
+    u = jnp.ones((m, d))
+    # raise prob so the test is deterministic-ish
+    out = A.gambler_attack(KEY, u, num_servers=servers, prob=0.2,
+                           scale=-1e20)
+    changed = np.asarray(out != u)
+    ssize = d // servers
+    assert changed[:, :ssize].any()               # attacked server slice
+    assert not changed[:, ssize:].any()           # others clean
+
+
+def test_make_attack_dispatch_and_none():
+    assert A.make_attack(A.AttackConfig(name="none")) is None
+    cfg = A.AttackConfig(name="signflip", num_byzantine=2)
+    atk = A.make_attack(cfg)
+    u = jnp.ones((5, 3))
+    out = atk(KEY, u)
+    np.testing.assert_allclose(out[:2], -10.0)
+
+
+def test_zero_attack():
+    u = jnp.ones((6, 4))
+    out = A.zero_attack(KEY, u, q=2)
+    np.testing.assert_allclose(out[:2], 0.0)
+    np.testing.assert_allclose(out[2:], 1.0)

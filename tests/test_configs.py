@@ -1,0 +1,93 @@
+"""Assignment conformance: every architecture config matches the assigned
+numbers exactly, and the input shapes match the assigned grid."""
+import pytest
+
+from repro.configs import INPUT_SHAPES, get_arch, list_archs
+
+# (layers, d_model, heads, kv, d_ff, vocab) from the assignment block
+ASSIGNED = {
+    "gemma3-27b": (62, 5376, 32, 16, 21504, 262144),
+    "granite-8b": (36, 4096, 32, 8, 14336, 49152),
+    "mamba2-2.7b": (64, 2560, 0, 0, 0, 50280),
+    "kimi-k2-1t-a32b": (61, 7168, 64, 8, 2048, 163840),
+    "gemma2-2b": (26, 2304, 8, 4, 9216, 256000),
+    "internvl2-26b": (48, 6144, 48, 8, 16384, 92553),
+    "starcoder2-7b": (32, 4608, 36, 4, 18432, 49152),
+    "whisper-large-v3": (32, 1280, 20, 20, 5120, 51866),
+    "hymba-1.5b": (32, 1600, 25, 5, 5504, 32001),
+    "deepseek-v2-lite-16b": (27, 2048, 16, 16, 1408, 102400),
+}
+
+
+def test_all_ten_archs_registered():
+    assert sorted(list_archs()) == sorted(ASSIGNED)
+
+
+@pytest.mark.parametrize("arch", sorted(ASSIGNED))
+def test_assigned_dimensions(arch):
+    cfg = get_arch(arch)
+    L, d, H, kv, ff, V = ASSIGNED[arch]
+    assert cfg.num_layers == L
+    assert cfg.d_model == d
+    assert cfg.num_heads == H
+    assert cfg.num_kv_heads == kv
+    assert cfg.d_ff == ff
+    assert cfg.vocab_size == V
+    assert cfg.citation
+
+
+def test_family_specifics():
+    assert get_arch("mamba2-2.7b").ssm_state == 128
+    k = get_arch("kimi-k2-1t-a32b")
+    assert (k.num_experts, k.num_experts_per_tok) == (384, 8)
+    ds = get_arch("deepseek-v2-lite-16b")
+    assert ds.use_mla and ds.kv_lora_rank == 512
+    assert (ds.num_experts, ds.num_experts_per_tok,
+            ds.num_shared_experts) == (64, 6, 2)
+    hy = get_arch("hymba-1.5b")
+    assert hy.hybrid and hy.ssm_state == 16
+    g3 = get_arch("gemma3-27b")
+    assert g3.window_pattern == (1024,) * 5 + (None,)      # 5:1 local:global
+    g2 = get_arch("gemma2-2b")
+    assert g2.attn_logit_softcap == 50.0 and g2.final_logit_softcap == 30.0
+    w = get_arch("whisper-large-v3")
+    assert w.encoder_layers == 32 and w.encoder_seq_len == 1500
+    iv = get_arch("internvl2-26b")
+    assert iv.num_patches == 256 and iv.vit_dim == 3200
+
+
+def test_input_shapes_grid():
+    assert INPUT_SHAPES["train_4k"].seq_len == 4096
+    assert INPUT_SHAPES["train_4k"].global_batch == 256
+    assert INPUT_SHAPES["prefill_32k"].seq_len == 32768
+    assert INPUT_SHAPES["prefill_32k"].global_batch == 32
+    assert INPUT_SHAPES["decode_32k"].global_batch == 128
+    assert INPUT_SHAPES["decode_32k"].is_decode
+    assert INPUT_SHAPES["long_500k"].seq_len == 524288
+    assert INPUT_SHAPES["long_500k"].global_batch == 1
+
+
+@pytest.mark.parametrize("arch", sorted(ASSIGNED))
+def test_reduced_variants_are_small(arch):
+    r = get_arch(arch + "-reduced")
+    assert r.num_layers <= 2
+    assert r.d_model <= 512
+    assert r.num_experts <= 4
+    assert r.family == get_arch(arch).family
+
+
+def test_long_context_applicability():
+    """DESIGN.md §4 skips: pure full-attention archs don't support
+    long_500k; SSM/hybrid/windowed ones do."""
+    supports = {a: get_arch(a).supports_long_context for a in list_archs()}
+    assert supports["mamba2-2.7b"] and supports["hymba-1.5b"]
+    assert supports["gemma3-27b"] and supports["gemma2-2b"]
+    assert supports["starcoder2-7b"]
+    for a in ("granite-8b", "kimi-k2-1t-a32b", "internvl2-26b",
+              "whisper-large-v3", "deepseek-v2-lite-16b"):
+        assert not supports[a], a
+
+
+def test_unknown_arch_raises():
+    with pytest.raises(KeyError):
+        get_arch("gpt5")

@@ -1,0 +1,118 @@
+"""Pallas kernel validation: shape/dtype sweeps + hypothesis properties
+against the pure-jnp oracles (interpret mode on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops as kops
+from repro.kernels.krum.ref import pairwise_sq_dists_ref
+from repro.kernels.phocas.ref import phocas_ref
+from repro.kernels.trmean.ref import trmean_ref
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _valid_bs(m):
+    return sorted(b for b in {1, 2, (m + 1) // 2 - 1}
+                  if 1 <= b <= (m + 1) // 2 - 1)
+
+
+def _assert_phocas_close(u, b, got, ref, atol=1e-4):
+    """Phocas is discontinuous at distance ties (two values symmetric around
+    the center): a 1-ulp center difference legitimately flips which value is
+    dropped.  Mismatching coordinates must exhibit such a tie."""
+    got, ref = np.asarray(got), np.asarray(ref)
+    bad = np.where(np.abs(got - ref) > atol)[0]
+    if bad.size == 0:
+        return
+    center = np.asarray(trmean_ref(u, b))
+    for i in bad:
+        d = np.sort(np.abs(np.asarray(u[:, i]) - center[i]))
+        m = u.shape[0]
+        boundary_gap = d[m - b] - d[m - b - 1]
+        assert boundary_gap < 1e-4, (
+            f"coord {i}: err {abs(got[i] - ref[i])} without a boundary tie "
+            f"(gap {boundary_gap})")
+
+
+@pytest.mark.parametrize("m", [4, 5, 20, 32, 64])
+@pytest.mark.parametrize("d", [1, 100, 2048, 5000])
+def test_trmean_kernel_sweep(m, d):
+    u = 10 * jax.random.normal(jax.random.fold_in(KEY, m * d), (m, d))
+    for b in _valid_bs(m):
+        np.testing.assert_allclose(kops.trmean(u, b), trmean_ref(u, b),
+                                   atol=1e-4, err_msg=f"b={b}")
+
+
+@pytest.mark.parametrize("m", [4, 5, 20, 32])
+@pytest.mark.parametrize("d", [1, 100, 2048, 5000])
+def test_phocas_kernel_sweep(m, d):
+    u = 10 * jax.random.normal(jax.random.fold_in(KEY, m + d), (m, d))
+    for b in _valid_bs(m):
+        _assert_phocas_close(u, b, kops.phocas(u, b), phocas_ref(u, b))
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16, jnp.float16])
+def test_kernel_dtypes(dtype):
+    u = (10 * jax.random.normal(KEY, (16, 512))).astype(dtype)
+    t = kops.trmean(u, 3)
+    p = kops.phocas(u, 3)
+    assert t.dtype == jnp.float32 and p.dtype == jnp.float32
+    np.testing.assert_allclose(t, trmean_ref(u, 3), atol=1e-2)
+    np.testing.assert_allclose(p, phocas_ref(u, 3), atol=1e-2)
+
+
+@pytest.mark.parametrize("m,d", [(5, 100), (20, 2048), (32, 4096)])
+def test_krum_gram_kernel(m, d):
+    u = 10 * jax.random.normal(KEY, (m, d))
+    ref = np.asarray(pairwise_sq_dists_ref(u))
+    got = np.asarray(kops.pairwise_sq_dists(u))
+    # Gram-trick cancellation scales with the squared norms
+    np.testing.assert_allclose(got, ref, atol=1e-6 * ref.max() + 1e-3)
+
+
+def test_krum_kernel_selects_same_vector():
+    from repro.core import aggregators as agg
+    u = jax.random.normal(KEY, (12, 777))
+    u = u.at[3].set(40.0)
+    np.testing.assert_allclose(kops.krum(u, 2), agg.krum(u, 2), atol=1e-5)
+    np.testing.assert_allclose(kops.multikrum(u, 2), agg.multikrum(u, 2),
+                               atol=1e-5)
+
+
+def test_kernel_b_validation():
+    with pytest.raises(ValueError):
+        kops.trmean(jnp.ones((6, 8)), 3)
+    with pytest.raises(ValueError):
+        kops.phocas(jnp.ones((6, 8)), 4)
+
+
+@given(st.integers(4, 33), st.integers(1, 300), st.integers(0, 2**31 - 1))
+@settings(max_examples=25, deadline=None)
+def test_trmean_kernel_property(m, d, seed):
+    u = 5 * jax.random.normal(jax.random.PRNGKey(seed), (m, d))
+    b = (m - 1) // 3
+    if b == 0:
+        return
+    np.testing.assert_allclose(kops.trmean(u, b), trmean_ref(u, b), atol=1e-4)
+
+
+@given(st.integers(4, 25), st.integers(1, 200), st.integers(0, 2**31 - 1))
+@settings(max_examples=25, deadline=None)
+def test_phocas_kernel_property(m, d, seed):
+    u = 5 * jax.random.normal(jax.random.PRNGKey(seed), (m, d))
+    b = (m - 1) // 3
+    if b == 0:
+        return
+    np.testing.assert_allclose(kops.phocas(u, b), phocas_ref(u, b), atol=1e-4)
+
+
+def test_kernel_with_duplicate_values_ties():
+    """Exact ties at the keep/drop boundary must match the stable oracle."""
+    u = jnp.array([[0.0, 2.0], [2.0, 0.0], [1.0, 1.0], [1.0, 1.0]])
+    np.testing.assert_allclose(kops.phocas(u, 1), phocas_ref(u, 1), atol=1e-6)
+    u2 = jnp.tile(jnp.array([[1.0], [1.0], [1.0], [2.0], [0.0]]), (1, 200))
+    np.testing.assert_allclose(kops.trmean(u2, 2), trmean_ref(u2, 2),
+                               atol=1e-6)

@@ -1,0 +1,189 @@
+"""Per-architecture smoke tests (reduced configs, CPU): forward shapes, no
+NaNs, one train step, decode/forward consistency, SSD correctness."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_arch, list_archs
+from repro.core import RobustConfig
+from repro.data import TokenStream, make_worker_batches
+from repro.models import build_model
+from repro.optim import OptConfig, init_opt_state
+from repro.train import make_train_step
+
+KEY = jax.random.PRNGKey(0)
+ARCHS = list_archs()
+
+
+def _batch(cfg, B=4, S=16):
+    toks = jax.random.randint(KEY, (B, S), 0, cfg.vocab_size)
+    batch = {"tokens": toks, "labels": toks}
+    if cfg.num_patches:
+        batch["patch_embeds"] = 0.1 * jax.random.normal(
+            KEY, (B, cfg.num_patches, cfg.vit_dim))
+    if cfg.is_encdec:
+        batch["audio_embeds"] = 0.1 * jax.random.normal(
+            KEY, (B, cfg.encoder_seq_len, cfg.frontend_dim))
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_forward_shapes_no_nans(arch):
+    cfg = get_arch(arch + "-reduced")
+    assert cfg.num_layers <= 2 and cfg.d_model <= 512
+    assert cfg.num_experts <= 4
+    model = build_model(cfg)
+    params = model.init(KEY)
+    batch = _batch(cfg)
+    logits, aux = model.forward(params, batch)
+    assert logits.shape == (4, 16, cfg.vocab_size)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+    assert bool(jnp.isfinite(aux))
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_one_train_step(arch):
+    cfg = get_arch(arch + "-reduced")
+    model = build_model(cfg)
+    params = model.init(KEY)
+    opt_cfg = OptConfig(name="sgd", lr=0.05)
+    rob = RobustConfig(rule="trmean", b=1)
+    step = make_train_step(model, robust_cfg=rob, opt_cfg=opt_cfg,
+                           num_workers=4, mesh=None, donate=False)
+    opt_state = init_opt_state(opt_cfg, params)
+    batch = make_worker_batches(_batch(cfg, B=8), 4)
+    p2, o2, metrics = step(params, opt_state, batch, KEY)
+    assert bool(jnp.isfinite(metrics["loss"]))
+    assert metrics["loss_per_worker"].shape == (4,)
+    # params actually moved
+    moved = any(
+        not np.allclose(np.asarray(a, np.float32), np.asarray(b, np.float32))
+        for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(p2)))
+    assert moved
+    assert all(bool(jnp.all(jnp.isfinite(x))) for x in jax.tree.leaves(p2))
+
+
+@pytest.mark.parametrize("arch", ["granite-8b", "mamba2-2.7b",
+                                  "deepseek-v2-lite-16b", "gemma3-27b",
+                                  "hymba-1.5b"])
+def test_decode_matches_forward(arch):
+    cfg = get_arch(arch + "-reduced")
+    if cfg.is_moe:   # raise capacity so no tokens drop (train-only semantics)
+        cfg = dataclasses.replace(cfg, capacity_factor=8.0)
+    model = build_model(cfg)
+    params = model.init(KEY)
+    B, S = 2, 12
+    toks = jax.random.randint(KEY, (B, S), 0, cfg.vocab_size)
+    full, _ = model.forward(params, {"tokens": toks, "labels": toks})
+    cache = model.init_cache(B, S)
+    outs = []
+    for t in range(S):
+        lg, cache = model.decode_step(params, cache, toks[:, t:t + 1],
+                                      jnp.int32(t))
+        outs.append(lg[:, 0])
+    inc = jnp.stack(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(inc), np.asarray(full), atol=2e-3,
+                               rtol=1e-3)
+
+
+@pytest.mark.parametrize("arch,pattern", [
+    ("starcoder2-7b", (4,)),           # uniform window, ring wraps 2x
+    ("gemma3-27b", (4, None)),         # mixed ring + absolute caches
+    ("hymba-1.5b", (4,)),              # hybrid: ring + SSM state
+])
+def test_ring_buffer_wraparound(arch, pattern):
+    """Decode with S >> window must match the parallel forward — exercises
+    the ring-buffer modular position arithmetic past the wrap point
+    (regression: the pre-fix code never entered the ring branch)."""
+    cfg = dataclasses.replace(get_arch(arch + "-reduced"),
+                              window_pattern=pattern)
+    model = build_model(cfg)
+    params = model.init(KEY)
+    B, S = 2, 12                       # S = 3x window
+    toks = jax.random.randint(KEY, (B, S), 0, cfg.vocab_size)
+    full, _ = model.forward(params, {"tokens": toks, "labels": toks})
+    cache = model.init_cache(B, S)
+    outs = []
+    for t in range(S):
+        lg, cache = model.decode_step(params, cache, toks[:, t:t + 1],
+                                      jnp.int32(t))
+        outs.append(lg[:, 0])
+    np.testing.assert_allclose(np.asarray(jnp.stack(outs, 1)),
+                               np.asarray(full), atol=2e-3, rtol=1e-3)
+
+
+def test_sliding_window_limits_context():
+    """Windowed attention must ignore tokens beyond the window."""
+    cfg = dataclasses.replace(get_arch("starcoder2-7b-reduced"),
+                              window_pattern=(4,))
+    model = build_model(cfg)
+    params = model.init(KEY)
+    S = 12
+    t1 = jax.random.randint(KEY, (1, S), 0, cfg.vocab_size)
+    t2 = t1.at[:, 0].set((t1[:, 0] + 7) % cfg.vocab_size)  # differ @ pos 0
+    l1, _ = model.forward(params, {"tokens": t1, "labels": t1})
+    l2, _ = model.forward(params, {"tokens": t2, "labels": t2})
+    # with window 4 and 2 layers, receptive field < 8: last position immune
+    np.testing.assert_allclose(np.asarray(l1[:, -1]), np.asarray(l2[:, -1]),
+                               atol=1e-5)
+    assert not np.allclose(np.asarray(l1[:, 0]), np.asarray(l2[:, 0]))
+
+
+def test_ssd_chunked_vs_recurrence():
+    """Chunked SSD == step-by-step recurrence (the SSD duality)."""
+    from repro.models.ssm import ssd_chunked
+    b, S, h, p, n = 2, 32, 3, 4, 8
+    key = jax.random.PRNGKey(3)
+    ks = jax.random.split(key, 4)
+    x = jax.random.normal(ks[0], (b, S, h, p))
+    dA = -jax.nn.softplus(jax.random.normal(ks[1], (b, S, h)))
+    B = jax.random.normal(ks[2], (b, S, n))
+    C = jax.random.normal(ks[3], (b, S, n))
+    y_chunk, state_chunk = ssd_chunked(x, dA, B, C, chunk=8)
+
+    state = jnp.zeros((b, h, p, n))
+    ys = []
+    for t in range(S):
+        state = (jnp.exp(dA[:, t])[..., None, None] * state
+                 + jnp.einsum("bhp,bn->bhpn", x[:, t], B[:, t]))
+        ys.append(jnp.einsum("bhpn,bn->bhp", state, C[:, t]))
+    y_rec = jnp.stack(ys, axis=1)
+    np.testing.assert_allclose(np.asarray(y_chunk), np.asarray(y_rec),
+                               atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(state_chunk), np.asarray(state),
+                               atol=1e-4, rtol=1e-4)
+
+
+def test_moe_router_load_balance_aux():
+    from repro.models.moe import init_moe, moe_block
+    cfg = get_arch("deepseek-v2-lite-16b-reduced")
+    p = init_moe(KEY, cfg)
+    x = jax.random.normal(KEY, (2, 16, cfg.d_model), jnp.float32)
+    out, aux = moe_block(p, cfg, x)
+    assert out.shape == x.shape
+    assert float(aux) >= 0.0
+    # aux loss minimal value is coef * 1.0 at perfect balance
+    assert float(aux) >= cfg.router_aux_loss_coef * 0.99
+
+
+def test_vlm_patch_positions_masked_in_loss():
+    cfg = get_arch("internvl2-26b-reduced")
+    model = build_model(cfg)
+    params = model.init(KEY)
+    b1 = _batch(cfg, B=2, S=16)
+    # perturbing labels at patch positions must not change the loss
+    b2 = dict(b1)
+    b2["labels"] = b1["labels"].at[:, : cfg.num_patches].set(0)
+    l1, l2 = model.loss(params, b1), model.loss(params, b2)
+    np.testing.assert_allclose(float(l1), float(l2), rtol=1e-6)
+
+
+def test_gemma2_softcaps_bound_logits():
+    cfg = get_arch("gemma2-2b-reduced")
+    model = build_model(cfg)
+    params = model.init(KEY)
+    logits, _ = model.forward(params, _batch(cfg))
+    assert float(jnp.max(jnp.abs(logits))) <= cfg.final_logit_softcap + 1e-3

@@ -1,0 +1,113 @@
+"""End-to-end Byzantine-resilient training: the paper's qualitative claims
+as executable tests (MLP on the Gaussian-mixture MNIST stand-in)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import AttackConfig, RobustConfig
+from repro.data import ClassificationData, make_worker_batches
+from repro.models.mlp import build_mlp_model, mlp_accuracy
+from repro.optim import OptConfig, init_opt_state
+from repro.train import make_train_step
+
+M = 20                       # paper: 20 workers
+DIM, CLASSES = 64, 10
+
+
+def run_training(rule, attack, *, b=6, q=6, steps=60, lr=0.1,
+                 use_kernels=False):
+    data = ClassificationData(num_classes=CLASSES, dim=DIM, noise=0.8, seed=1)
+    model = build_mlp_model(dims=(DIM, 64, CLASSES))
+    params = model.init(jax.random.PRNGKey(0))
+    opt_cfg = OptConfig(name="sgd", lr=lr)
+    rob = RobustConfig(rule=rule, b=b, q=q, use_kernels=use_kernels,
+                       attack=attack)
+    step = make_train_step(model, robust_cfg=rob, opt_cfg=opt_cfg,
+                           num_workers=M, mesh=None, donate=False)
+    opt_state = init_opt_state(opt_cfg, params)
+    key = jax.random.PRNGKey(42)
+    for i in range(steps):
+        batch = make_worker_batches(data.batch(i, 20 * M), M)
+        params, opt_state, metrics = step(params, opt_state, batch,
+                                          jax.random.fold_in(key, i))
+    test = data.test_set(1024)
+    return float(mlp_accuracy(params, test)), metrics
+
+
+CLEAN = AttackConfig(name="none")
+GAUSS = AttackConfig(name="gaussian", num_byzantine=6)
+OMNI = AttackConfig(name="omniscient", num_byzantine=6)
+BITFLIP = AttackConfig(name="bitflip", num_byzantine=1)
+GAMBLER = AttackConfig(name="gambler", gambler_prob=0.02)
+
+
+def test_clean_baseline_learns():
+    acc, _ = run_training("mean", CLEAN)
+    assert acc > 0.75, acc
+
+
+def test_mean_fails_under_gaussian():
+    """Paper §5.1.1: averaging is not Byzantine resilient — with zero-mean
+    Gaussian corruption on a separable task that manifests as heavily
+    degraded convergence, while Phocas performs as if there were no
+    failures at all.  Compare at 15 steps, where the clean baseline (and
+    Phocas) have already converged."""
+    acc_mean, _ = run_training("mean", GAUSS, steps=15)
+    acc_phocas, _ = run_training("phocas", GAUSS, steps=15)
+    acc_clean, _ = run_training("mean", CLEAN, steps=15)
+    assert acc_clean > 0.95, acc_clean
+    assert acc_phocas > 0.95, acc_phocas          # ≈ no-failure
+    assert acc_phocas - acc_mean > 0.2, (acc_mean, acc_phocas)
+
+
+def test_omniscient_phocas_survives_trmean_degrades():
+    """Paper §5.1.2 ordering: Phocas ≈ no-failure; Mean diverges."""
+    acc_mean, m_mean = run_training("mean", OMNI)
+    acc_phocas, _ = run_training("phocas", OMNI)
+    assert acc_phocas > 0.7, acc_phocas
+    assert acc_mean < 0.3 or not np.isfinite(m_mean["loss"])
+
+
+def test_bitflip_dimensional_resilience():
+    """Paper §5.1.3: only Trmean/Phocas survive the dimensional attack;
+    Krum gets stuck."""
+    acc_trmean, _ = run_training("trmean", BITFLIP, b=8, q=8)
+    acc_phocas, _ = run_training("phocas", BITFLIP, b=8, q=8)
+    acc_krum, _ = run_training("krum", BITFLIP, b=8, q=8)
+    assert acc_trmean > 0.7, acc_trmean
+    assert acc_phocas > 0.7, acc_phocas
+    assert acc_krum < acc_phocas - 0.15, (acc_krum, acc_phocas)
+
+
+def test_gambler_trmean_survives():
+    """Paper §5.1.4: dimensional rules survive the multi-server attack."""
+    acc, _ = run_training("trmean", GAMBLER, b=8, q=8)
+    assert acc > 0.7, acc
+
+
+def test_kernel_backed_training_matches_ref():
+    """use_kernels=True (Pallas interpret) trains identically."""
+    a1, _ = run_training("phocas", GAUSS, steps=25)
+    a2, _ = run_training("phocas", GAUSS, steps=25, use_kernels=True)
+    assert abs(a1 - a2) < 0.05, (a1, a2)
+
+
+@pytest.mark.parametrize("opt", ["momentum", "adam"])
+def test_robust_aggregation_composes_with_optimizers(opt):
+    """Beyond-paper: Δ-resilient aggregate feeds any optimizer."""
+    data = ClassificationData(num_classes=CLASSES, dim=DIM, noise=0.8, seed=1)
+    model = build_mlp_model(dims=(DIM, 64, CLASSES))
+    params = model.init(jax.random.PRNGKey(0))
+    opt_cfg = OptConfig(name=opt, lr=0.05 if opt == "momentum" else 0.005)
+    rob = RobustConfig(rule="phocas", b=6, attack=GAUSS)
+    step = make_train_step(model, robust_cfg=rob, opt_cfg=opt_cfg,
+                           num_workers=M, mesh=None, donate=False)
+    opt_state = init_opt_state(opt_cfg, params)
+    key = jax.random.PRNGKey(9)
+    for i in range(60):
+        batch = make_worker_batches(data.batch(i, 20 * M), M)
+        params, opt_state, _ = step(params, opt_state, batch,
+                                    jax.random.fold_in(key, i))
+    acc = float(mlp_accuracy(params, data.test_set(1024)))
+    assert acc > 0.7, acc
