@@ -28,6 +28,14 @@ from jax.flatten_util import ravel_pytree
 
 from repro.core import aggregators
 from repro.core.attacks import AttackConfig, make_attack
+from repro.dist.collectives import (
+    all_to_all_scatter as _a2a_scatter,
+    axis_size as _axis_size,
+    gather_slices as _gather_slices,
+    gather_workers as _gather_workers,
+    psum_axes as _psum_axes,
+    worker_slice_index as _worker_slice_index,
+)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -87,49 +95,6 @@ def aggregate_stacked_tree(stacked, cfg: RobustConfig,
 # Distributed path (must be called inside shard_map)
 # ---------------------------------------------------------------------------
 
-def _axis_size(names: Sequence[str]) -> int:
-    size = 1
-    for n in names:
-        size *= jax.lax.axis_size(n)
-    return size
-
-
-def _gather_workers(x: jax.Array, worker_axes: Sequence[str]) -> jax.Array:
-    """all_gather a (D,) local vector over worker axes -> (m_total, D)."""
-    g = x[None]
-    for name in reversed(worker_axes):
-        g = jax.lax.all_gather(g, name, axis=0, tiled=True)
-    return g
-
-
-def _a2a_scatter(x: jax.Array, worker_axes: Sequence[str]) -> jax.Array:
-    """Re-tile a (D,) local vector into (m_total, D/m_total) per device.
-
-    Sequential tiled all_to_all over each worker axis: split the dimension
-    slice, concatenate received blocks along the worker axis (DESIGN.md §2).
-    """
-    m_total = _axis_size(worker_axes)
-    d = x.shape[0]
-    assert d % m_total == 0, f"flat dim {d} not divisible by m={m_total}"
-    first = worker_axes[0]
-    m0 = jax.lax.axis_size(first)
-    u = x.reshape(m0, d // m0)
-    u = jax.lax.all_to_all(u, first, split_axis=0, concat_axis=0, tiled=True)
-    for name in worker_axes[1:]:
-        # split the dim axis, concat along the worker axis
-        u = jax.lax.all_to_all(u, name, split_axis=1, concat_axis=0, tiled=True)
-    return u  # (m_total, d // m_total)
-
-
-def _gather_slices(v: jax.Array, worker_axes: Sequence[str]) -> jax.Array:
-    """Inverse of the dim-sharding of :func:`_a2a_scatter` for the aggregated
-    (D/m_total,) slice -> (D,)."""
-    for name in reversed(worker_axes[1:]):
-        v = jax.lax.all_gather(v, name, axis=0, tiled=True)
-    v = jax.lax.all_gather(v, worker_axes[0], axis=0, tiled=True)
-    return v
-
-
 def _krum_select(mat: jax.Array, cfg: RobustConfig,
                  psum_axes: Tuple[str, ...]) -> jax.Array:
     """Krum-family selection with distance partial-sums psum'd over
@@ -138,10 +103,7 @@ def _krum_select(mat: jax.Array, cfg: RobustConfig,
     sq = jnp.sum(mat * mat, axis=1)
     gram = mat @ mat.T
     d2 = jnp.maximum(sq[:, None] + sq[None, :] - 2.0 * gram, 0.0)
-    # Sequential psums: the partial-distance matrix can be varying over some
-    # axes and invarying over others, which a single multi-axis psum rejects.
-    for ax in psum_axes:
-        d2 = jax.lax.psum(d2, ax)
+    d2 = _psum_axes(d2, psum_axes)
     d2 = d2 + jnp.diag(jnp.full((m,), jnp.inf, d2.dtype))
     k = m - cfg.q - 2
     if k <= 0:
@@ -161,8 +123,7 @@ def _geomedian_dist(mat: jax.Array, psum_axes: Tuple[str, ...],
     vector geometry while updates stay slice-local."""
     def step(z, _):
         d2 = jnp.sum((mat - z[None]) ** 2, axis=1)
-        for ax in psum_axes:
-            d2 = jax.lax.psum(d2, ax)
+        d2 = _psum_axes(d2, psum_axes)
         w = 1.0 / jnp.maximum(jnp.sqrt(d2), eps)
         z_new = jnp.sum(mat * w[:, None], axis=0) / jnp.sum(w)
         return z_new, None
@@ -232,10 +193,3 @@ def robust_aggregate_dist(grad_tree, cfg: RobustConfig,
     if pad:
         agg = agg[:d]
     return unravel(agg.astype(ravel_pytree(grad_tree)[0].dtype))
-
-
-def _worker_slice_index(worker_axes: Sequence[str]) -> jax.Array:
-    idx = jnp.int32(0)
-    for name in worker_axes:
-        idx = idx * jax.lax.axis_size(name) + jax.lax.axis_index(name)
-    return idx

@@ -1,0 +1,15 @@
+"""``repro.dist`` — SPMD sharding subsystem (DESIGN.md §3).
+
+Mesh-role derivation and PartitionSpec rules (:mod:`repro.dist.sharding`),
+layout-agnostic collectives for shard_map bodies
+(:mod:`repro.dist.collectives`), and the jax-version compat layer
+(:mod:`repro.dist.compat`, installed at ``repro`` package import).
+"""
+from repro.dist.collectives import (  # noqa: F401
+    all_to_all_scatter, axis_size, gather_slices, gather_workers,
+    psum_axes, worker_slice_index,
+)
+from repro.dist.sharding import (  # noqa: F401
+    MODEL_AXIS_NAMES, cache_pspec, model_axes_of, param_pspec_fsdp,
+    tree_pspecs, worker_axes_of,
+)

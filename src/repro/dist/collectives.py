@@ -1,0 +1,89 @@
+"""Layout-agnostic collective helpers for code running inside ``shard_map``.
+
+These are the building blocks of both robust-aggregation layouts
+(DESIGN.md §2) and are shared by ``core/robust.py``, the Pallas kernels'
+distributed drivers, serving, and the benchmarks:
+
+  * :func:`gather_workers` — replicated layout: rebuild the full (m, D)
+    worker matrix on every device;
+  * :func:`all_to_all_scatter` / :func:`gather_slices` — sharded layout:
+    re-tile the worker matrix so each device owns an (m, D/m) dimension
+    slice, and the inverse rebuild of the aggregated vector;
+  * :func:`axis_size` / :func:`worker_slice_index` — joint-axis geometry
+    (the multi-pod ``("pod", "data")`` worker role is a flattened product
+    of mesh axes, not a single named axis).
+
+All functions take ``worker_axes`` as an ordered sequence of mesh axis
+names; sequencing the per-axis collectives (instead of one multi-axis call)
+keeps each step a supported tiled collective on every jax version and maps
+onto the hierarchical ICI/DCN topology (intra-pod first, pod axis last).
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+
+def axis_size(names: Sequence[str]) -> int:
+    """Product of the sizes of mesh axes ``names`` (inside shard_map)."""
+    size = 1
+    for n in names:
+        size *= jax.lax.axis_size(n)
+    return size
+
+
+def gather_workers(x: jax.Array, worker_axes: Sequence[str]) -> jax.Array:
+    """all_gather a (D,) local vector over worker axes -> (m_total, D)."""
+    g = x[None]
+    for name in reversed(worker_axes):
+        g = jax.lax.all_gather(g, name, axis=0, tiled=True)
+    return g
+
+
+def all_to_all_scatter(x: jax.Array,
+                       worker_axes: Sequence[str]) -> jax.Array:
+    """Re-tile a (D,) local vector into (m_total, D/m_total) per device.
+
+    Sequential tiled all_to_all over each worker axis: split the dimension
+    slice, concatenate received blocks along the worker axis (DESIGN.md §2).
+    """
+    m_total = axis_size(worker_axes)
+    d = x.shape[0]
+    assert d % m_total == 0, f"flat dim {d} not divisible by m={m_total}"
+    first = worker_axes[0]
+    m0 = jax.lax.axis_size(first)
+    u = x.reshape(m0, d // m0)
+    u = jax.lax.all_to_all(u, first, split_axis=0, concat_axis=0, tiled=True)
+    for name in worker_axes[1:]:
+        # split the dim axis, concat along the worker axis
+        u = jax.lax.all_to_all(u, name, split_axis=1, concat_axis=0,
+                               tiled=True)
+    return u  # (m_total, d // m_total)
+
+
+def gather_slices(v: jax.Array, worker_axes: Sequence[str]) -> jax.Array:
+    """Inverse of the dim-sharding of :func:`all_to_all_scatter` for the
+    aggregated (D/m_total,) slice -> (D,)."""
+    for name in reversed(worker_axes[1:]):
+        v = jax.lax.all_gather(v, name, axis=0, tiled=True)
+    v = jax.lax.all_gather(v, worker_axes[0], axis=0, tiled=True)
+    return v
+
+
+def worker_slice_index(worker_axes: Sequence[str]) -> jax.Array:
+    """Linearized index of this device along the joint worker axes."""
+    idx = jnp.int32(0)
+    for name in worker_axes:
+        idx = idx * jax.lax.axis_size(name) + jax.lax.axis_index(name)
+    return idx
+
+
+def psum_axes(x: jax.Array, names: Sequence[str]) -> jax.Array:
+    """Sequential psum over ``names`` — a value can be varying over some
+    axes and invariant over others, which a single multi-axis psum rejects
+    under replication checking."""
+    for name in names:
+        x = jax.lax.psum(x, name)
+    return x

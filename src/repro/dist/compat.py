@@ -1,0 +1,105 @@
+"""jax version compatibility for the sharding subsystem.
+
+The repo targets the modern jax sharding surface (``jax.shard_map``,
+``jax.set_mesh``, ``jax.sharding.AxisType``, ``jax.make_mesh(...,
+axis_types=...)``, ``jax.sharding.get_abstract_mesh``) but must run on the
+pinned jax 0.4.37, where those names either do not exist or live under
+``jax.experimental``.  :func:`install` back-fills the missing names onto the
+``jax`` namespace from their 0.4-era equivalents:
+
+  * ``jax.shard_map``            -> ``jax.experimental.shard_map.shard_map``
+    (the modern ``check_vma`` kwarg maps onto the old ``check_rep``);
+  * ``jax.set_mesh(mesh)``       -> the legacy mesh context manager
+    (``with mesh:``), which is what resolves bare ``PartitionSpec``s inside
+    ``with_sharding_constraint`` on 0.4;
+  * ``jax.make_mesh``            -> accepts and ignores ``axis_types``
+    (0.4 meshes are always fully Auto);
+  * ``jax.sharding.AxisType``    -> a stand-in enum (Auto/Explicit/Manual);
+  * ``jax.sharding.get_abstract_mesh`` -> the ambient legacy mesh from
+    ``jax.interpreters.pxla.thread_resources`` (an empty ``Mesh()`` when no
+    mesh context is active, matching the modern empty AbstractMesh).
+
+Every shim is installed only when the attribute is missing, so on a modern
+jax this module is a no-op.  ``repro/__init__.py`` calls :func:`install` at
+package import time, which makes the shims visible to test subprocesses that
+``import repro.<anything>`` before touching the modern API.
+"""
+from __future__ import annotations
+
+import enum
+import functools
+
+import jax
+
+
+def _ambient_mesh():
+    """The legacy (0.4-era) ambient mesh: set by ``with mesh:`` contexts."""
+    from jax.interpreters import pxla
+    return pxla.thread_resources.env.physical_mesh
+
+
+def _shard_map_compat(f=None, *, mesh, in_specs, out_specs, check_vma=True,
+                      **kwargs):
+    from jax.experimental.shard_map import shard_map as _shard_map
+    if f is None:
+        return functools.partial(_shard_map_compat, mesh=mesh,
+                                 in_specs=in_specs, out_specs=out_specs,
+                                 check_vma=check_vma, **kwargs)
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_rep=check_vma, **kwargs)
+
+
+class _SetMesh:
+    """``jax.set_mesh(mesh)`` compat: usable as a context manager.
+
+    On 0.4 the only ambient-mesh mechanism is the legacy mesh context
+    (``Mesh.__enter__``), which both ``with_sharding_constraint(x, P(...))``
+    and our :func:`get_abstract_mesh` shim read.
+    """
+
+    def __init__(self, mesh):
+        self.mesh = mesh
+
+    def __enter__(self):
+        self.mesh.__enter__()
+        return self.mesh
+
+    def __exit__(self, *exc):
+        return self.mesh.__exit__(*exc)
+
+
+def install() -> None:
+    """Back-fill modern jax sharding names missing from the pinned jax."""
+    if not hasattr(jax.sharding, "get_abstract_mesh"):
+        jax.sharding.get_abstract_mesh = _ambient_mesh
+
+    if not hasattr(jax.sharding, "AxisType"):
+        class AxisType(enum.Enum):
+            Auto = "auto"
+            Explicit = "explicit"
+            Manual = "manual"
+
+        jax.sharding.AxisType = AxisType
+
+    if not hasattr(jax, "shard_map"):
+        jax.shard_map = _shard_map_compat
+
+    if not hasattr(jax.lax, "axis_size"):
+        # psum of the python literal 1 constant-folds to the axis size.
+        jax.lax.axis_size = lambda name: jax.lax.psum(1, name)
+
+    if not hasattr(jax, "set_mesh"):
+        jax.set_mesh = _SetMesh
+
+    # Signature inspection, NOT a probe call: make_mesh touches jax device
+    # state, which must stay untouched until the caller has set XLA_FLAGS.
+    import inspect
+    if "axis_types" not in inspect.signature(jax.make_mesh).parameters:
+        _make_mesh = jax.make_mesh
+
+        @functools.wraps(_make_mesh)
+        def make_mesh(axis_shapes, axis_names, *args, axis_types=None, **kw):
+            del axis_types                       # 0.4 meshes are always Auto
+            return _make_mesh(axis_shapes, axis_names, *args, **kw)
+
+        jax.make_mesh = make_mesh

@@ -1,0 +1,184 @@
+"""Mesh-role derivation and PartitionSpec rules for every model family.
+
+The paper's parameter-server roles map onto mesh axes by NAME, not position
+(DESIGN.md §3):
+
+  * worker axes — the paper's m workers (``data``, plus ``pod`` in the
+    multi-pod ``("pod", "data", "model")`` mesh): per-worker gradients are
+    stacked over these axes and robust-aggregated across them;
+  * model axes — tensor-parallel sharding of the parameters themselves
+    (``model``); Krum-family distances psum over them so vector-wise
+    selection sees full-vector geometry.
+
+``tree_pspecs`` turns a parameter / optimizer-state / gradient pytree into a
+matching pytree of ``PartitionSpec`` using name+shape rules that cover all
+families in ``models/`` (dense GQA, MLA, MoE, Mamba2-SSD, hybrid, enc-dec):
+Megatron-style column/row parallelism over the model axes, with replication
+as the safe fallback whenever a dimension does not divide.  ``leaf_rule``
+overrides the per-leaf decision (``param_pspec_fsdp`` is the FSDP rule used
+by the streaming dry-run mode); ``cache_pspec`` is the KV-cache analogue
+used by ``serve/engine.py`` and the decode dry-run.
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import Mesh, PartitionSpec as P
+
+# Axis names playing the tensor-parallel role; everything else is a worker
+# (data-parallel) axis.  Order within each role follows mesh.axis_names.
+MODEL_AXIS_NAMES = frozenset({"model", "tensor", "tp", "mp"})
+
+
+def worker_axes_of(mesh: Mesh) -> Tuple[str, ...]:
+    """Mesh axes playing the paper's worker role, e.g. ``("data",)`` or
+    ``("pod", "data")`` on the multi-pod mesh."""
+    return tuple(a for a in mesh.axis_names if a not in MODEL_AXIS_NAMES)
+
+
+def model_axes_of(mesh: Mesh) -> Tuple[str, ...]:
+    """Tensor-parallel mesh axes (``("model",)`` on the standard meshes)."""
+    return tuple(a for a in mesh.axis_names if a in MODEL_AXIS_NAMES)
+
+
+def _axes_size(mesh: Mesh, axes: Sequence[str]) -> int:
+    size = 1
+    for a in axes:
+        size *= mesh.shape[a]
+    return size
+
+
+# ---------------------------------------------------------------------------
+# Parameter rules
+# ---------------------------------------------------------------------------
+
+# Linears whose OUTPUT features are model-sharded (column parallel) vs whose
+# INPUT features are (row parallel — they consume column-parallel outputs).
+_COL_PARALLEL = frozenset({
+    "wq", "wk", "wv", "wi", "wg",            # attention / GLU in-projections
+    "wkv_a", "wk_rope", "wk_b", "wv_b",      # MLA projections
+    "in_proj", "fc1", "router", "lm_head",   # SSM / VLM / head
+})
+_ROW_PARALLEL = frozenset({"wo", "out_proj", "fc2"})
+
+
+def _path_names(path) -> Tuple[str, ...]:
+    return tuple(str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
+
+
+def _tp_dim(names: Tuple[str, ...], ndim: int) -> Optional[int]:
+    """Which dim of this leaf is model-sharded (None = replicate).
+
+    Works on trailing path names so the same rules cover bare params,
+    optimizer-state copies (``mu/.../wq/w``), and scan-stacked layer blocks
+    (leading period dim shifts real dims to the END — hence negative dims).
+    """
+    if ndim < 2:
+        return None
+    leaf_name = names[-1] if names else ""
+    owner = names[-2] if len(names) >= 2 else ""
+    if leaf_name == "w":                       # a C.init_linear leaf
+        if owner in _ROW_PARALLEL:
+            return ndim - 2                    # contraction (input) features
+        if owner in _COL_PARALLEL:
+            return ndim - 1                    # output features
+        return ndim - 1
+    if leaf_name == "table":                   # embedding: shard the vocab
+        return ndim - 2
+    if leaf_name in ("moe_wi", "moe_wg"):      # (..., E, d, f): shard f
+        return ndim - 1
+    if leaf_name == "moe_wo":                  # (..., E, f, d): shard f
+        return ndim - 2
+    if leaf_name == "conv_w":                  # (width, channels): shard ch
+        return ndim - 1
+    if leaf_name == "scale" or ndim < 2:       # norms etc.
+        return None
+    return ndim - 1                            # unknown matrices: try last
+
+
+def tree_pspecs(tree, mesh: Mesh,
+                leaf_rule: Optional[Callable] = None):
+    """PartitionSpec pytree matching ``tree`` (arrays or ShapeDtypeStructs).
+
+    ``leaf_rule(name, leaf, mesh) -> PartitionSpec | None`` overrides the
+    default tensor-parallel rule per leaf (``name`` is the "/"-joined path);
+    returning None falls through to the default.
+    """
+    model_axes = model_axes_of(mesh)
+    tp = _axes_size(mesh, model_axes)
+
+    def spec_of(path, leaf):
+        names = _path_names(path)
+        if leaf_rule is not None:
+            override = leaf_rule("/".join(names), leaf, mesh)
+            if override is not None:
+                return override
+        shape = tuple(leaf.shape)
+        dim = _tp_dim(names, len(shape))
+        if (dim is None or tp <= 1 or shape[dim] % tp
+                or shape[dim] < tp):
+            return P()
+        spec = [None] * len(shape)
+        spec[dim] = model_axes if len(model_axes) > 1 else model_axes[0]
+        return P(*spec)
+
+    return jax.tree_util.tree_map_with_path(spec_of, tree)
+
+
+def param_pspec_fsdp(name: str, leaf, mesh: Mesh) -> Optional[P]:
+    """FSDP leaf rule: fully shard each leaf over the joint (worker, model)
+    device set, falling back to progressively smaller axis groups until one
+    divides — the O(params/devices) memory mode used by the streaming
+    dry-run (``--mode streaming``) for 1T-scale archs."""
+    del name
+    shape = tuple(leaf.shape)
+    if not shape:
+        return P()
+    axes = worker_axes_of(mesh) + model_axes_of(mesh)
+    # Longest suffix-group first (drops the coarsest axes first: a pure
+    # 'model' group is the plain TP fallback), largest dims first.
+    groups = [axes[i:] for i in range(len(axes))]
+    groups += [(a,) for a in axes[:-1]]
+    dims = sorted(range(len(shape)), key=lambda d: -shape[d])
+    for group in groups:
+        size = _axes_size(mesh, group)
+        if size <= 1:
+            continue
+        for d in dims:
+            if shape[d] % size == 0 and shape[d] >= size:
+                spec = [None] * len(shape)
+                spec[d] = group if len(group) > 1 else group[0]
+                return P(*spec)
+    return P()
+
+
+# ---------------------------------------------------------------------------
+# KV-cache rule (serve/engine.py + decode dry-run)
+# ---------------------------------------------------------------------------
+
+def cache_pspec(path, leaf, mesh: Mesh) -> P:
+    """PartitionSpec for one KV-cache leaf.
+
+    Caches are batch-major — attention ``k``/``v``: (B, T, Kv, hd); MLA
+    latents: (B, T, rank); Mamba conv/SSD states: (B, ...) — except under
+    the period-scanned ``blocks`` subtree, which prepends an (n_periods,)
+    dim.  The request batch shards over the worker axes (each "server"
+    owns a slice of the traffic) and GQA KV heads shard over the model
+    axes when they divide.
+    """
+    names = _path_names(path)
+    shape = tuple(leaf.shape)
+    offset = 1 if names and names[0] == "blocks" else 0
+    spec = [None] * len(shape)
+    wa = worker_axes_of(mesh)
+    m = _axes_size(mesh, wa)
+    if m > 1 and len(shape) > offset and shape[offset] % m == 0:
+        spec[offset] = wa if len(wa) > 1 else wa[0]
+    model_axes = model_axes_of(mesh)
+    tp = _axes_size(mesh, model_axes)
+    head_dim = offset + 2
+    if (tp > 1 and names and names[-1] in ("k", "v")
+            and len(shape) == offset + 4 and shape[head_dim] % tp == 0):
+        spec[head_dim] = model_axes if len(model_axes) > 1 else model_axes[0]
+    return P(*spec)

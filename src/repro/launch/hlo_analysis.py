@@ -78,10 +78,17 @@ def _parse_dot_flops(shape_text: str, args_rest: str,
     if not m:
         return 0
     cdims = [int(x) for x in m.group(1).split(",") if x]
-    ops = re.match(r"\s*([^,)]+)", args_rest)
-    lhs_name = ops.group(1).strip().lstrip("%") if ops else ""
-    lhs_shape = shapes.get(lhs_name, "")
-    dims_m = _SHAPE_TOKEN.search(lhs_shape)
+    # lhs shape: post-scheduling HLO types every operand inline
+    # ("dot(f32[64,64]{1,0} %lhs, ...)") — the first shape token of the
+    # operand list IS the lhs shape.  Fall back to a named-op lookup for
+    # untyped operand syntax ("dot(%lhs, %rhs)").  A bare name extraction
+    # must not split on commas (shapes contain them: "f32[64,64]").
+    dims_m = _SHAPE_TOKEN.search(args_rest)
+    if dims_m is None or dims_m.start() >= args_rest.find(
+            "lhs_contracting_dims"):
+        ops = re.match(r"\s*%?([\w\.\-]+)", args_rest)
+        lhs_name = ops.group(1) if ops else ""
+        dims_m = _SHAPE_TOKEN.search(shapes.get(lhs_name, ""))
     if not dims_m:
         return 0
     dims = [int(x) for x in dims_m.group(2).split(",") if x]

@@ -1,7 +1,10 @@
 """Serving launcher: batched greedy generation with the KV-cache runtime.
 
   python -m repro.launch.serve --arch gemma2-2b-reduced --batch 4 \
-      --prompt-len 8 --new-tokens 16
+      --prompt-len 8 --new-tokens 16 [--mesh 4x2]
+
+--mesh data×model serves over the local device set with the ``repro.dist``
+layout (requests sharded over the data axis, KV heads over the model axis).
 """
 from __future__ import annotations
 
@@ -22,7 +25,15 @@ def main():
     ap.add_argument("--prompt-len", type=int, default=8)
     ap.add_argument("--new-tokens", type=int, default=16)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--mesh", default="",
+                    help="data×model, e.g. 4x2; empty = single device")
     args = ap.parse_args()
+
+    mesh = None
+    if args.mesh:
+        from repro.launch.mesh import make_host_mesh
+        d, m = (int(x) for x in args.mesh.split("x"))
+        mesh = make_host_mesh(data=d, model=m)
 
     cfg = get_arch(args.arch)
     model = build_model(cfg)
@@ -31,7 +42,7 @@ def main():
     prompts = jax.random.randint(key, (args.batch, args.prompt_len), 0,
                                  cfg.vocab_size)
     t0 = time.time()
-    out = generate(model, params, prompts, args.new_tokens)
+    out = generate(model, params, prompts, args.new_tokens, mesh=mesh)
     dt = time.time() - t0
     tok_s = args.batch * args.new_tokens / dt
     print(f"[serve] {args.arch}: generated {out.shape} in {dt:.2f}s "

@@ -19,7 +19,6 @@ from repro.data import TokenStream
 from repro.models import build_model
 from repro.optim import OptConfig
 from repro.train import Trainer, TrainerConfig
-from repro.train.step import shard_params
 
 
 def main():
@@ -66,8 +65,6 @@ def main():
     ds = TokenStream(vocab_size=cfg.vocab_size, seq_len=args.seq_len,
                      global_batch=args.global_batch)
     trainer = Trainer(model, ds.batch, tcfg, robust, opt, mesh=mesh)
-    if mesh is not None:
-        trainer.params = shard_params(trainer.params, mesh)
     print(f"[train] {args.arch}: {sum(x.size for x in jax.tree.leaves(trainer.params)):,} params, "
           f"rule={args.rule} b={args.b} attack={args.attack} "
           f"mesh={args.mesh or 'none'}")

@@ -29,17 +29,29 @@ def dtype_of(cfg) -> jnp.dtype:
     return jnp.dtype(cfg.compute_dtype)
 
 
+def get_abstract_mesh():
+    """Compat shim: ``jax.sharding.get_abstract_mesh`` is absent in the
+    pinned jax 0.4.37 — fall back to the legacy ambient mesh set by
+    ``with mesh:`` / the ``jax.set_mesh`` shim (an empty ``Mesh()`` when no
+    mesh context is active, matching the modern empty AbstractMesh)."""
+    fn = getattr(jax.sharding, "get_abstract_mesh", None)
+    if fn is not None:
+        return fn()
+    from repro.dist.compat import _ambient_mesh
+    return _ambient_mesh()
+
+
 def model_axis_size() -> int:
     """Size of the ambient mesh's 'model' axis (0 when no mesh is active —
     single-device tests / examples)."""
-    am = jax.sharding.get_abstract_mesh()
+    am = get_abstract_mesh()
     if am is None or am.empty or "model" not in am.axis_names:
         return 0
     return am.shape["model"]
 
 
 def data_axis_size() -> int:
-    am = jax.sharding.get_abstract_mesh()
+    am = get_abstract_mesh()
     if am is None or am.empty or "data" not in am.axis_names:
         return 0
     return am.shape["data"]
@@ -47,7 +59,7 @@ def data_axis_size() -> int:
 
 def shard_hint(x: jax.Array, spec: tuple) -> jax.Array:
     """with_sharding_constraint when a mesh is active; no-op otherwise."""
-    am = jax.sharding.get_abstract_mesh()
+    am = get_abstract_mesh()
     if am is None or am.empty:
         return x
     from jax.sharding import PartitionSpec as P

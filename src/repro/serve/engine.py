@@ -1,12 +1,28 @@
 """Serving runtime: jitted single-token decode step + batched greedy
-generation loop over the KV cache."""
+generation loop over the KV cache.
+
+Multi-device serving reuses the ``repro.dist`` rules: parameters get the
+tensor-parallel specs (``tree_pspecs``), the KV cache gets ``cache_pspec``
+(request batch over the worker axes, GQA KV heads over the model axes), and
+the decode step is traced under the mesh so ``shard_hint`` constraints
+activate.  Single-device behavior (``mesh=None``) is unchanged.
+"""
 from __future__ import annotations
 
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import Mesh
+from jax.sharding import Mesh, NamedSharding
+
+
+def shard_cache(cache, mesh: Mesh):
+    """Device-put a KV cache according to ``repro.dist.cache_pspec``."""
+    from repro.dist.sharding import cache_pspec
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: jax.device_put(
+            leaf, NamedSharding(mesh, cache_pspec(path, leaf, mesh))),
+        cache)
 
 
 def make_serve_step(model, *, mesh: Optional[Mesh] = None, donate=True):
@@ -18,18 +34,34 @@ def make_serve_step(model, *, mesh: Optional[Mesh] = None, donate=True):
         next_tokens = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
         return next_tokens[:, None], logits, cache
 
-    return jax.jit(serve_step, donate_argnums=(1,) if donate else ())
+    jitted = jax.jit(serve_step, donate_argnums=(1,) if donate else ())
+    if mesh is None:
+        return jitted
+
+    def stepped(params, cache, tokens, pos):
+        with mesh:       # ambient mesh: activates shard_hint constraints
+            return jitted(params, cache, tokens, pos)
+
+    return stepped
 
 
 def generate(model, params, prompts: jax.Array, max_new_tokens: int,
-             *, max_len: Optional[int] = None):
+             *, max_len: Optional[int] = None,
+             mesh: Optional[Mesh] = None):
     """Greedy batched generation.  prompts: (B, S0) int32.
     Prefills by stepping the prompt token-by-token (decode-path prefill),
-    then samples greedily.  Returns (B, S0 + max_new_tokens)."""
+    then samples greedily.  Returns (B, S0 + max_new_tokens).
+
+    With ``mesh``, params and cache are laid out by the ``repro.dist``
+    rules before the loop starts (requests shard over the worker axes)."""
     B, S0 = prompts.shape
     total = S0 + max_new_tokens if max_len is None else max_len
     cache = model.init_cache(B, total)
-    step = make_serve_step(model, donate=False)
+    if mesh is not None:
+        from repro.train.step import shard_params
+        params = shard_params(params, mesh)
+        cache = shard_cache(cache, mesh)
+    step = make_serve_step(model, mesh=mesh, donate=False)
 
     toks = prompts
     nxt = prompts[:, :1]

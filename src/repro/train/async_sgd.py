@@ -33,6 +33,7 @@ from repro.optim.optimizers import OptConfig, apply_updates, init_opt_state
 class AsyncConfig:
     num_workers: int = 20
     staleness: int = 4                 # tau: expected staleness in steps
+    update_clip: float = 10.0          # global-norm bound on the applied update
     seed: int = 0
 
 
@@ -70,6 +71,19 @@ def make_async_train_step(model, *, robust_cfg: RobustConfig,
         buffer = grads                              # every slot refreshed
 
         agg = aggregate_stacked_tree(buffer, robust_cfg, key=k_attack)
+        # Bounded-update rule: stale gradients make unbounded steps unstable,
+        # so the server clips the aggregated update's global norm (standard
+        # stale-synchronous stabilization).  This is a trust region, NOT a
+        # defense: a corrupted aggregate direction (e.g. Mean under the
+        # dimensional bitflip attack) stays corrupted after clipping — the
+        # update budget is spent entirely on the attacked coordinates and
+        # learning stalls, while robust rules yield clean directions that
+        # clipping leaves essentially untouched.
+        if acfg.update_clip:
+            from repro.train.step import _tree_norm
+            gn = _tree_norm(agg)
+            scale = jnp.minimum(1.0, acfg.update_clip / jnp.maximum(gn, 1e-12))
+            agg = jax.tree.map(lambda x: x * scale, agg)
         params, opt = apply_updates(opt_cfg, state["params"], agg,
                                     state["opt"])
 

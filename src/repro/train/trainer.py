@@ -41,6 +41,10 @@ class Trainer:
             num_workers=tcfg.num_workers, mesh=mesh, donate=False)
         key = jax.random.PRNGKey(tcfg.seed)
         self.params = model.init(key)
+        if mesh is not None:
+            # place params (and hence opt state) on the repro.dist TP layout
+            from repro.train.step import shard_params
+            self.params = shard_params(self.params, mesh)
         from repro.optim.optimizers import init_opt_state
         self.opt_state = init_opt_state(opt_cfg, self.params)
         self.history: list = []

@@ -1,0 +1,37 @@
+"""Optional-hypothesis shim: property tests skip on minimal installs.
+
+Usage (instead of ``from hypothesis import given, settings, strategies``):
+
+    from hypothesis_compat import given, settings, st
+
+When ``hypothesis`` is importable these are the real objects; otherwise
+``@given``/``@settings`` become skip decorators and ``st`` an inert
+stand-in so strategy-builder calls at module import still evaluate.
+"""
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                                    # minimal install
+    HAVE_HYPOTHESIS = False
+
+    def _skip_property_test(*_a, **_k):
+        def deco(fn):
+            return pytest.mark.skip(reason="hypothesis not installed")(fn)
+        return deco
+
+    given = settings = _skip_property_test
+
+    class _NoStrategies:
+        """Strategy-builder calls (``st.integers(...)``, ``@st.composite``)
+        must still evaluate at module import; they return inert
+        placeholders."""
+
+        def composite(self, fn):
+            return lambda *a, **k: None
+
+        def __getattr__(self, name):
+            return lambda *a, **k: None
+
+    st = _NoStrategies()

@@ -1,0 +1,222 @@
+"""Unit tests for the ``repro.dist`` sharding API: mesh-role derivation and
+PartitionSpec rules on 1-device, (data, model), and (pod, data, model)
+meshes.  Multi-device meshes run in spawned subprocesses with fake host
+devices (the main pytest process keeps the default 1 device)."""
+import json
+import os
+import subprocess
+import sys
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.dist.sharding import (cache_pspec, model_axes_of,
+                                 param_pspec_fsdp, tree_pspecs,
+                                 worker_axes_of)
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def run_sub(code: str, devices: int, timeout: int = 300) -> str:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    out = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                         text=True, env=env, timeout=timeout)
+    assert out.returncode == 0, out.stderr[-4000:]
+    return out.stdout
+
+
+def one_device_mesh() -> Mesh:
+    return Mesh(np.asarray(jax.devices()[:1]).reshape(1, 1),
+                ("data", "model"))
+
+
+# ---------------------------------------------------------------------------
+# In-process: 1-device mesh
+# ---------------------------------------------------------------------------
+
+def test_axis_roles_one_device():
+    mesh = one_device_mesh()
+    assert worker_axes_of(mesh) == ("data",)
+    assert model_axes_of(mesh) == ("model",)
+
+
+def test_tree_pspecs_one_device_all_replicated():
+    """With a size-1 model axis nothing divides usefully: every leaf must be
+    fully replicated (and the spec tree must mirror the input structure)."""
+    mesh = one_device_mesh()
+    tree = {"embed": {"table": jax.ShapeDtypeStruct((128, 64), "float32")},
+            "stack": {"blocks": {"l0": {"mixer": {"wq": {
+                "w": jax.ShapeDtypeStruct((2, 64, 32), "float32")}}}}},
+            "final_norm": {"scale": jax.ShapeDtypeStruct((64,), "float32")}}
+    specs = tree_pspecs(tree, mesh)
+    assert jax.tree_util.tree_structure(specs, is_leaf=lambda x: isinstance(
+        x, P)) == jax.tree_util.tree_structure(tree)
+    for leaf in jax.tree_util.tree_leaves(
+            specs, is_leaf=lambda x: isinstance(x, P)):
+        assert leaf == P()
+
+
+def test_param_pspec_fsdp_one_device():
+    mesh = one_device_mesh()
+    leaf = jax.ShapeDtypeStruct((256, 64), "float32")
+    assert param_pspec_fsdp("stack/w", leaf, mesh) == P()
+
+
+def test_cache_pspec_one_device():
+    mesh = one_device_mesh()
+
+    class KeyEntry:
+        def __init__(self, key):
+            self.key = key
+
+    leaf = jax.ShapeDtypeStruct((8, 16, 4, 32), "float32")
+    spec = cache_pspec((KeyEntry("tail0"), KeyEntry("mixer"),
+                        KeyEntry("k")), leaf, mesh)
+    assert spec == P(None, None, None, None)
+
+
+def test_leaf_rule_override():
+    """leaf_rule wins when it returns a spec, falls through on None."""
+    mesh = one_device_mesh()
+    tree = {"a": {"w": jax.ShapeDtypeStruct((4, 4), "float32")},
+            "b": {"w": jax.ShapeDtypeStruct((4, 4), "float32")}}
+    marker = P(None, None)
+    specs = tree_pspecs(tree, mesh, leaf_rule=lambda name, leaf, m:
+                        marker if name.startswith("a") else None)
+    assert specs["a"]["w"] == marker
+    assert specs["b"]["w"] == P()
+
+
+# ---------------------------------------------------------------------------
+# Subprocess: (data, model) mesh — 8 devices
+# ---------------------------------------------------------------------------
+
+DATA_MODEL = r"""
+import jax, json
+from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.configs import get_arch
+from repro.dist.sharding import (model_axes_of, param_pspec_fsdp,
+                                 tree_pspecs, worker_axes_of)
+from repro.models import build_model
+
+mesh = jax.make_mesh((4, 2), ('data', 'model'))
+out = {'worker': worker_axes_of(mesh), 'model': model_axes_of(mesh)}
+
+# Every model family: each leaf's spec must be constructible and divide.
+def check_arch(arch):
+    model = build_model(get_arch(arch))
+    shapes = jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
+    specs = tree_pspecs(shapes, mesh)
+    n_sharded = 0
+    for leaf, spec in zip(
+            jax.tree_util.tree_leaves(shapes),
+            jax.tree_util.tree_leaves(specs,
+                                      is_leaf=lambda x: isinstance(x, P))):
+        NamedSharding(mesh, spec)                    # must be constructible
+        for d, ax in enumerate(spec):
+            if ax is None:
+                continue
+            group = (ax,) if isinstance(ax, str) else ax
+            size = 1
+            for a in group:
+                size *= mesh.shape[a]
+            assert leaf.shape[d] % size == 0, (arch, leaf.shape, spec)
+            n_sharded += 1
+    return n_sharded
+
+counts = {a: check_arch(a) for a in
+          ['granite-8b-reduced', 'deepseek-v2-lite-16b-reduced',
+           'mamba2-2.7b-reduced', 'kimi-k2-1t-a32b-reduced']}
+out['sharded_counts'] = counts
+
+# FSDP rule: largest dim sharded over the joint (data, model) group.
+leaf = jax.ShapeDtypeStruct((512, 24), 'float32')
+out['fsdp'] = str(param_pspec_fsdp('x/w', leaf, mesh))
+leaf2 = jax.ShapeDtypeStruct((7, 24), 'float32')     # 7 indivisible, 24 = 8*3
+out['fsdp_fallback'] = str(param_pspec_fsdp('x/w', leaf2, mesh))
+leaf3 = jax.ShapeDtypeStruct((7, 5), 'float32')      # nothing divides
+out['fsdp_replicated'] = str(param_pspec_fsdp('x/w', leaf3, mesh))
+print(json.dumps(out))
+"""
+
+
+def test_data_model_mesh_rules():
+    res = json.loads(run_sub(DATA_MODEL, devices=8).strip().splitlines()[-1])
+    assert res["worker"] == ["data"]
+    assert res["model"] == ["model"]
+    # every family must actually shard something under TP
+    assert all(n > 0 for n in res["sharded_counts"].values()), res
+    assert res["fsdp"] == str(P(("data", "model"), None))
+    assert res["fsdp_fallback"] == str(P(None, ("data", "model")))
+    assert res["fsdp_replicated"] == str(P())
+
+
+# ---------------------------------------------------------------------------
+# Subprocess: (pod, data, model) multi-pod mesh — 16 devices
+# ---------------------------------------------------------------------------
+
+MULTIPOD = r"""
+import jax, json
+from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.dist.sharding import (cache_pspec, model_axes_of,
+                                 param_pspec_fsdp, tree_pspecs,
+                                 worker_axes_of)
+
+mesh = jax.make_mesh((2, 4, 2), ('pod', 'data', 'model'))
+out = {'worker': worker_axes_of(mesh), 'model': model_axes_of(mesh)}
+
+tree = {'embed': {'table': jax.ShapeDtypeStruct((128, 64), 'float32')},
+        'blocks': {'l0': {'mixer': {
+            'wq': {'w': jax.ShapeDtypeStruct((3, 64, 32), 'float32')},
+            'wo': {'w': jax.ShapeDtypeStruct((3, 32, 64), 'float32')}},
+            'ffn': {'moe_wi': jax.ShapeDtypeStruct((3, 4, 64, 16), 'float32'),
+                    'moe_wo': jax.ShapeDtypeStruct((3, 4, 16, 64), 'float32')}}},
+        'norm': {'scale': jax.ShapeDtypeStruct((64,), 'float32')}}
+specs = tree_pspecs(tree, mesh)
+for spec in jax.tree_util.tree_leaves(specs,
+                                      is_leaf=lambda x: isinstance(x, P)):
+    NamedSharding(mesh, spec)
+out['specs'] = {
+    'table': str(specs['embed']['table']),
+    'wq': str(specs['blocks']['l0']['mixer']['wq']['w']),
+    'wo': str(specs['blocks']['l0']['mixer']['wo']['w']),
+    'moe_wi': str(specs['blocks']['l0']['ffn']['moe_wi']),
+    'moe_wo': str(specs['blocks']['l0']['ffn']['moe_wo']),
+    'scale': str(specs['norm']['scale']),
+}
+
+# fsdp: joint (pod, data, model) group = 16-way
+leaf = jax.ShapeDtypeStruct((64, 48), 'float32')
+out['fsdp'] = str(param_pspec_fsdp('w', leaf, mesh))
+
+# cache: batch over joint (pod, data) workers, KV heads over model
+class KE:
+    def __init__(self, key): self.key = key
+kv = jax.ShapeDtypeStruct((16, 32, 4, 8), 'float32')
+out['cache_tail'] = str(cache_pspec((KE('tail0'), KE('mixer'), KE('k')),
+                                    kv, mesh))
+kv_blocks = jax.ShapeDtypeStruct((3, 16, 32, 4, 8), 'float32')
+out['cache_blocks'] = str(cache_pspec((KE('blocks'), KE('l0'), KE('mixer'),
+                                       KE('v')), kv_blocks, mesh))
+print(json.dumps(out))
+"""
+
+
+def test_multipod_mesh_rules():
+    res = json.loads(run_sub(MULTIPOD, devices=16).strip().splitlines()[-1])
+    assert res["worker"] == ["pod", "data"]
+    assert res["model"] == ["model"]
+    s = res["specs"]
+    assert s["table"] == str(P("model", None))          # vocab sharded
+    assert s["wq"] == str(P(None, None, "model"))       # column parallel
+    assert s["wo"] == str(P(None, "model", None))       # row parallel
+    assert s["moe_wi"] == str(P(None, None, None, "model"))
+    assert s["moe_wo"] == str(P(None, None, "model", None))
+    assert s["scale"] == str(P())
+    assert res["fsdp"] == str(P(("pod", "data", "model"), None))
+    assert res["cache_tail"] == str(P(("pod", "data"), None, "model", None))
+    assert res["cache_blocks"] == str(
+        P(None, ("pod", "data"), None, "model", None))
