@@ -12,7 +12,7 @@ from typing import Dict, Optional
 
 import jax
 
-from repro.core import AttackConfig, RobustConfig
+from repro.core import AttackConfig, RobustConfig, registry
 from repro.data import ClassificationData, make_worker_batches
 from repro.models.mlp import build_mlp_model, mlp_accuracy
 from repro.models.cnn import build_cnn_model, cnn_topk_accuracy
@@ -20,15 +20,27 @@ from repro.optim import OptConfig, init_opt_state
 from repro.train import make_train_step
 
 M = 20                         # paper: 20 worker processes
-RULES = ("mean", "krum", "multikrum", "trmean", "phocas")
 
+# Registry-enumerated: every registered rule (plugins included) enters the
+# sweeps automatically.
+RULES = registry.available_rules()
+
+# One AttackConfig per registered attack, at the Byzantine count the paper's
+# experiments use (recorded on the attack's registry spec).
 ATTACKS: Dict[str, AttackConfig] = {
     "none": AttackConfig(name="none"),
-    "gaussian": AttackConfig(name="gaussian", num_byzantine=6),
-    "omniscient": AttackConfig(name="omniscient", num_byzantine=6),
-    "bitflip": AttackConfig(name="bitflip", num_byzantine=1),
-    "gambler": AttackConfig(name="gambler", gambler_prob=0.0005),
+    **{name: AttackConfig(name=name,
+                          num_byzantine=registry.get_attack_spec(name).paper_q)
+       for name in registry.available_attacks()},
 }
+
+
+def paper_b(attack: str, *, dimensional: int = 8, classic: int = 6) -> int:
+    """The paper's trim/Byzantine-estimate parameter per attack kind."""
+    if attack == "none":
+        return classic
+    kind = registry.get_attack_spec(attack).kind
+    return dimensional if kind == "dimensional" else classic
 
 
 @dataclasses.dataclass

@@ -1,12 +1,16 @@
-"""Figure 2 reproduction: accuracy of each aggregation rule under the four
-attacks (+ Mean-without-Byzantine reference).  CSV: results/fig2.csv."""
+"""Figure 2 reproduction: accuracy of each aggregation rule under each
+registered attack (+ Mean-without-Byzantine reference).  The rule × attack
+grid is enumerated from the registry, so plugin rules/attacks join the sweep
+automatically.  CSV: results/fig2.csv."""
 from __future__ import annotations
 
 import argparse
 import csv
 import os
 
-from benchmarks.common import ATTACKS, RULES, ExpConfig, run_experiment
+from repro.core import registry
+
+from benchmarks.common import ExpConfig, RULES, paper_b, run_experiment
 
 
 def main(full: bool = False, model: str = "mlp",
@@ -18,10 +22,9 @@ def main(full: bool = False, model: str = "mlp",
     ref = run_experiment("mean", "none", cfg)
     rows.append({"attack": "none", "rule": "mean_no_byz",
                  "final_acc": ref["final_acc"], "max_acc": ref["max_acc"]})
-    for attack in ("gaussian", "omniscient", "bitflip", "gambler"):
+    for attack in registry.available_attacks():
         for rule in RULES:
-            b = 8 if attack in ("bitflip", "gambler") else 6
-            r = run_experiment(rule, attack, cfg, b=b)
+            r = run_experiment(rule, attack, cfg, b=paper_b(attack))
             rows.append({"attack": attack, "rule": rule,
                          "final_acc": r["final_acc"],
                          "max_acc": r["max_acc"]})

@@ -12,7 +12,7 @@ import time
 import jax
 
 from repro.configs import get_arch
-from repro.core import RobustConfig
+from repro.core import RobustConfig, registry
 from repro.data import TokenStream, make_worker_batches
 from repro.models import build_model
 from repro.optim import OptConfig, init_opt_state
@@ -31,9 +31,13 @@ def main(out: str = "results/overhead.csv", reps: int = 3):
     batch = make_worker_batches(ds.batch(0), M)
     rows = []
     base_us = None
-    for rule, b in (("mean", 0), ("trmean", 2), ("phocas", 2), ("krum", 2),
-                    ("multikrum", 2), ("median", 0), ("geomedian", 0)):
-        rob = RobustConfig(rule=rule, b=b, q=max(b, 1))
+    # mean first: it is the overhead baseline the other rules divide by
+    others = tuple(n for n in registry.available_rules() if n != "mean")
+    for rule in ("mean",) + others:
+        cls = registry.get_rule(rule)
+        b = 2 if cls.uses_b else 0
+        q = 2 if cls.uses_q else max(b, 1)
+        rob = RobustConfig(rule=rule, b=b, q=q)
         step = make_train_step(model, robust_cfg=rob, opt_cfg=opt_cfg,
                                num_workers=M, mesh=None, donate=False)
         opt_state = init_opt_state(opt_cfg, params)

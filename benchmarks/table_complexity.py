@@ -1,18 +1,19 @@
 """§4.4 time-complexity table: µs per aggregation call vs (m, d) for every
-rule — empirically confirms Trmean/Phocas ≈ O(dm) vs Krum O(dm²).
-CSV: results/table_complexity.csv."""
+registered rule (XLA path, plus a ``<rule>_kernel`` Pallas variant for each
+rule that declares one) — empirically confirms Trmean/Phocas ≈ O(dm) vs
+Krum O(dm²).  CSV: results/table_complexity.csv."""
 from __future__ import annotations
 
 import argparse
 import csv
+import dataclasses
 import os
 import time
 
 import jax
 import jax.numpy as jnp
 
-from repro.core import aggregators as agg
-from repro.kernels import ops as kops
+from repro.core import registry
 
 
 def _timeit(fn, u, reps=5) -> float:
@@ -29,17 +30,18 @@ def main(out: str = "results/table_complexity.csv", full: bool = False):
     sizes = [(10, 100_000), (20, 100_000), (40, 100_000), (20, 1_000_000)]
     if full:
         sizes += [(80, 100_000), (20, 10_000_000)]
-    rules = {
-        "mean": lambda u: agg.mean(u),
-        "median": lambda u: agg.median(u),
-        "trmean_b4": jax.jit(lambda u: agg.trmean(u, 4)),
-        "phocas_b4": jax.jit(lambda u: agg.phocas(u, 4)),
-        "trmean_kernel": lambda u: kops.trmean(u, 4),
-        "phocas_kernel": lambda u: kops.phocas(u, 4),
-        "krum_q4": jax.jit(lambda u: agg.krum(u, 4)),
-        "multikrum_q4": jax.jit(lambda u: agg.multikrum(u, 4)),
-        "geomedian": jax.jit(agg.geomedian),
-    }
+    params = registry.RuleParams(b=4, q=4)
+    rules = {}
+    for name in registry.available_rules():
+        cls = registry.get_rule(name)
+        label = name + ("_b4" if cls.uses_b else "_q4" if cls.uses_q else "")
+        rules[label] = jax.jit(
+            registry.make_rule(name, dataclasses.replace(
+                params, backend="xla")).reduce)
+        if cls.has_kernel:
+            # Pallas path (not re-jitted: pallas_call manages its own tracing)
+            rules[name + "_kernel"] = registry.make_rule(
+                name, dataclasses.replace(params, backend="pallas")).reduce
     rows = []
     key = jax.random.PRNGKey(0)
     for m, d in sizes:

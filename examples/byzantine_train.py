@@ -12,16 +12,19 @@ import dataclasses
 import jax
 
 from repro.configs import get_arch
-from repro.core import AttackConfig, RobustConfig
+from repro.core import AttackConfig, RobustConfig, registry
 from repro.data import TokenStream
 from repro.models import build_model
 from repro.optim import OptConfig
 from repro.train import Trainer, TrainerConfig
 
 
-def run(rule: str, attack: AttackConfig, cfg, steps: int, m: int = 8):
+def run(rule: str, attack: AttackConfig, cfg, steps: int, m: int = 8,
+        backend: str = "auto"):
     model = build_model(cfg)
-    robust = RobustConfig(rule=rule, b=2, q=2, attack=attack)
+    # backend="auto" resolves per-rule through the registry: rules that
+    # declare a Pallas kernel use it off-CPU, everything else stays on XLA.
+    robust = RobustConfig(rule=rule, b=2, q=2, backend=backend, attack=attack)
     opt = OptConfig(name="sgd", lr=0.5)
     tcfg = TrainerConfig(num_workers=m, steps=steps,
                          log_every=max(steps // 10, 1))
@@ -37,6 +40,11 @@ def main():
     ap.add_argument("--steps", type=int, default=300)
     ap.add_argument("--small", action="store_true",
                     help="2-layer reduced model (fast CI)")
+    ap.add_argument("--rule", default="phocas",
+                    choices=registry.available_rules(),
+                    help="robust rule to compare against plain Mean")
+    ap.add_argument("--backend", default="auto",
+                    choices=("auto", "pallas", "xla"))
     args = ap.parse_args()
 
     base = get_arch("gemma2-2b-reduced")
@@ -53,12 +61,14 @@ def main():
     print(f"model: {cfg.name} ({n:,} params)\n")
 
     attack = AttackConfig(name="omniscient", num_byzantine=2)
-    print("=== Phocas under omniscient attack (2/8 workers Byzantine) ===")
-    first_p, last_p = run("phocas", attack, cfg, args.steps)
+    rule = args.rule
+    print(f"=== {rule} under omniscient attack (2/8 workers Byzantine) ===")
+    first_p, last_p = run(rule, attack, cfg, args.steps,
+                          backend=args.backend)
     print("\n=== Mean under the same attack ===")
     first_m, last_m = run("mean", attack, cfg, max(args.steps // 4, 20))
 
-    print(f"\nPhocas:  loss {first_p:.3f} -> {last_p:.3f}  (training works)")
+    print(f"\n{rule}:  loss {first_p:.3f} -> {last_p:.3f}  (training works)")
     print(f"Mean:    loss {first_m:.3f} -> {last_m:.3f}  (diverges/stuck)")
 
 

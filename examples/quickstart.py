@@ -1,14 +1,17 @@
 """Quickstart: the paper's contribution in 40 lines.
 
 Robust aggregation of worker gradients under a dimensional Byzantine attack:
-averaging breaks, Phocas doesn't.
+averaging breaks, the dimensional-resilient rules don't.  The rule list is
+enumerated from the pluggable registry (`repro.core.registry`) — any rule
+registered with ``@register_rule`` (see ``repro/core/rules/mediam.py`` for
+the single-file plugin template) shows up here automatically.
 
   PYTHONPATH=src python examples/quickstart.py
 """
 import jax
 import jax.numpy as jnp
 
-from repro.core import AttackConfig, RobustConfig, aggregate_matrix
+from repro.core import AttackConfig, RobustConfig, aggregate_matrix, registry
 
 key = jax.random.PRNGKey(0)
 m, d = 20, 10_000                       # 20 workers, 10k-dim gradient
@@ -22,11 +25,14 @@ grads = g[None] + 0.1 * jax.random.normal(key, (m, d))
 # classic (row-wise) defenses like Krum cannot help.
 attack = AttackConfig(name="bitflip", num_byzantine=1, bitflip_dims=1000)
 
-for rule, b in (("mean", 0), ("krum", 0), ("trmean", 2), ("phocas", 2)):
-    cfg = RobustConfig(rule=rule, b=b, q=max(b, 1), attack=attack)
+for rule in registry.available_rules():
+    meta = registry.get_rule(rule)
+    b = 2 if meta.uses_b else 0
+    cfg = RobustConfig(rule=rule, b=b, q=2, attack=attack)
     agg = aggregate_matrix(grads, cfg, key=key)
     err = float(jnp.linalg.norm(agg - g) / jnp.linalg.norm(g))
-    print(f"{rule:8s} (b={b}):  relative aggregation error = {err:10.3e}")
+    print(f"{rule:10s} [{meta.resilience:11s} resilience]  "
+          f"relative aggregation error = {err:10.3e}")
 
-print("\nMean/Krum are destroyed by per-dimension corruption;"
-      "\nTrmean/Phocas (dimensional Byzantine-resilient) are unaffected.")
+print("\nMean and the classic (row-wise) rules are destroyed by per-dimension"
+      "\ncorruption; the dimensional-resilient rules are unaffected.")

@@ -1,10 +1,16 @@
 """Core library: the paper's contribution (robust aggregation) as composable
-JAX modules."""
+JAX modules, dispatched through the pluggable Rule/Attack registry."""
+from repro.core import registry  # noqa: F401
+from repro.core.registry import (  # noqa: F401
+    AggregatorRule, RuleParams, register_rule, register_attack,
+    available_rules, available_attacks, make_rule,
+)
 from repro.core.aggregators import (  # noqa: F401
     mean, median, trmean, phocas, krum, multikrum, geomedian, krum_scores,
     get_aggregator, COORDINATE_WISE, VECTOR_WISE,
 )
 from repro.core.attacks import AttackConfig, make_attack  # noqa: F401
+from repro.core import rules  # noqa: F401  (single-file rule plugins)
 from repro.core.robust import (  # noqa: F401
     RobustConfig, aggregate_matrix, aggregate_stacked_tree,
     robust_aggregate_dist,

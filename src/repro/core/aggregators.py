@@ -14,14 +14,23 @@ Definitions follow the paper:
 * ``krum`` / ``multikrum`` — Definition 3 / Blanchard et al. baselines.
 * ``mean`` / ``median`` / ``geomedian`` — non-robust / Yin-et-al-family
   baselines.
+
+Each rule is additionally registered with ``repro.core.registry`` as an
+:class:`~repro.core.registry.AggregatorRule` subclass (bottom of this file);
+the registry objects carry the metadata (coordinate-wise?, resilience class,
+kernel availability) and the ``reduce_sharded`` collectives that the
+distributed engine, CLI, and benchmarks dispatch on.  Further rules live as
+single-file plugins under ``repro/core/rules/``.
 """
 from __future__ import annotations
 
-import functools
-from typing import Callable, Dict
+from typing import Callable, Sequence
 
 import jax
 import jax.numpy as jnp
+
+from repro.core.registry import (AggregatorRule, RuleParams, make_rule,
+                                 register_rule)
 
 Aggregator = Callable[..., jax.Array]
 
@@ -137,26 +146,195 @@ def geomedian(u: jax.Array, iters: int = 8, eps: float = 1e-8) -> jax.Array:
 
 
 # ---------------------------------------------------------------------------
-# Registry
+# Sharded (inside-shard_map) statistics shared by the vector-wise rules
+# ---------------------------------------------------------------------------
+
+def krum_scores_sharded(mat: jax.Array, q: int,
+                        psum_axes: Sequence[str]) -> jax.Array:
+    """Krum scores on a dim-sharded (m, D_slice) matrix: Gram partial
+    distances are psum'd over ``psum_axes`` so selection sees full-vector
+    geometry (empty axes = the plain single-device computation)."""
+    from repro.dist.collectives import psum_axes as _psum
+    m = mat.shape[0]
+    k = m - q - 2
+    if k <= 0:
+        raise ValueError(f"Krum requires m - q - 2 > 0 (m={m}, q={q})")
+    sq = jnp.sum(mat * mat, axis=1)
+    gram = mat @ mat.T
+    d2 = jnp.maximum(sq[:, None] + sq[None, :] - 2.0 * gram, 0.0)
+    d2 = _psum(d2, tuple(psum_axes))
+    d2 = d2 + jnp.diag(jnp.full((m,), jnp.inf, d2.dtype))
+    nearest = jnp.sort(d2, axis=1)[:, :k]
+    return jnp.sum(nearest, axis=1)
+
+
+def geomedian_sharded(mat: jax.Array, psum_axes: Sequence[str],
+                      iters: int = 8, eps: float = 1e-8) -> jax.Array:
+    """Weiszfeld iterations on a dim-sharded (m, D_slice) matrix: partial
+    squared distances are psum'd over ``psum_axes`` so weights use the full
+    vector geometry while updates stay slice-local."""
+    from repro.dist.collectives import psum_axes as _psum
+
+    def step(z, _):
+        d2 = jnp.sum((mat - z[None]) ** 2, axis=1)
+        d2 = _psum(d2, tuple(psum_axes))
+        w = 1.0 / jnp.maximum(jnp.sqrt(d2), eps)
+        z_new = jnp.sum(mat * w[:, None], axis=0) / jnp.sum(w)
+        return z_new, None
+
+    z, _ = jax.lax.scan(step, jnp.mean(mat, axis=0), None, length=iters)
+    return z
+
+
+# ---------------------------------------------------------------------------
+# Registered rule objects (metadata + dispatch; math stays in the functions)
+# ---------------------------------------------------------------------------
+
+@register_rule
+class MeanRule(AggregatorRule):
+    """Plain averaging — NOT Byzantine resilient (Proposition 1)."""
+    name = "mean"
+    coordinate_wise = True
+    resilience = "none"
+    supports_streaming = True
+
+    def _reduce_xla(self, u):
+        return mean(u)
+
+
+@register_rule
+class MedianRule(AggregatorRule):
+    """Coordinate-wise median — dimensional resilient (trmean, maximal b)."""
+    name = "median"
+    coordinate_wise = True
+    resilience = "dimensional"
+
+    def _reduce_xla(self, u):
+        return median(u)
+
+
+@register_rule
+class TrmeanRule(AggregatorRule):
+    """b-trimmed coordinate-wise mean (Definition 7)."""
+    name = "trmean"
+    coordinate_wise = True
+    resilience = "dimensional"
+    uses_b = True
+    has_kernel = True
+    supports_streaming = True
+
+    def _reduce_xla(self, u):
+        return trmean(u, self.params.b)
+
+    def _reduce_pallas(self, u):
+        from repro.kernels.trmean.ops import trmean as ktrmean
+        return ktrmean(u, self.params.b)
+
+
+@register_rule
+class PhocasRule(AggregatorRule):
+    """Phocas (Definition 8)."""
+    name = "phocas"
+    coordinate_wise = True
+    resilience = "dimensional"
+    uses_b = True
+    has_kernel = True
+    supports_streaming = True
+
+    def _reduce_xla(self, u):
+        return phocas(u, self.params.b)
+
+    def _reduce_pallas(self, u):
+        from repro.kernels.phocas.ops import phocas as kphocas
+        return kphocas(u, self.params.b)
+
+
+@register_rule
+class KrumRule(AggregatorRule):
+    """Krum (Definition 3) — classic resilience only (Proposition 3)."""
+    name = "krum"
+    coordinate_wise = False
+    resilience = "classic"
+    uses_q = True
+    has_kernel = True
+
+    def _reduce_xla(self, u):
+        return krum(u, self.params.q)
+
+    def _reduce_pallas(self, u):
+        from repro.kernels.krum.ops import krum as kkrum
+        return kkrum(u, self.params.q)
+
+    def reduce_sharded(self, mat, psum_axes):
+        scores = krum_scores_sharded(mat, self.params.q, psum_axes)
+        return mat[jnp.argmin(scores)]
+
+
+@register_rule
+class MultikrumRule(AggregatorRule):
+    """Multi-Krum: mean of the k lowest-score candidates."""
+    name = "multikrum"
+    coordinate_wise = False
+    resilience = "classic"
+    uses_q = True
+    has_kernel = True
+
+    def _k(self, m: int) -> int:
+        k = self.params.multikrum_k
+        return m - self.params.q - 2 if k is None else k
+
+    def _reduce_xla(self, u):
+        return multikrum(u, self.params.q, self.params.multikrum_k)
+
+    def _reduce_pallas(self, u):
+        from repro.kernels.krum.ops import multikrum as kmultikrum
+        return kmultikrum(u, self.params.q, self.params.multikrum_k)
+
+    def reduce_sharded(self, mat, psum_axes):
+        scores = krum_scores_sharded(mat, self.params.q, psum_axes)
+        _, idx = jax.lax.top_k(-scores, self._k(mat.shape[0]))
+        return jnp.mean(mat[idx], axis=0)
+
+
+@register_rule
+class GeomedianRule(AggregatorRule):
+    """Geometric median (Weiszfeld) — Chen et al. family baseline."""
+    name = "geomedian"
+    coordinate_wise = False
+    resilience = "classic"
+
+    def _reduce_xla(self, u):
+        return geomedian(u, iters=self.params.geomedian_iters)
+
+    def reduce_sharded(self, mat, psum_axes):
+        return geomedian_sharded(mat, psum_axes,
+                                 iters=self.params.geomedian_iters)
+
+
+# ---------------------------------------------------------------------------
+# Name-based lookup (registry-backed)
 # ---------------------------------------------------------------------------
 
 def get_aggregator(name: str, *, b: int = 0, q: int = 0,
-                   multikrum_k: int | None = None) -> Aggregator:
-    """Return a unary ``(m, ...) -> (...)`` aggregation closure by name."""
-    name = name.lower()
-    table: Dict[str, Aggregator] = {
-        "mean": mean,
-        "median": median,
-        "trmean": functools.partial(trmean, b=b),
-        "phocas": functools.partial(phocas, b=b),
-        "krum": functools.partial(krum, q=q),
-        "multikrum": functools.partial(multikrum, q=q, k=multikrum_k),
-        "geomedian": geomedian,
-    }
-    if name not in table:
-        raise ValueError(f"unknown aggregator {name!r}; have {sorted(table)}")
-    return table[name]
+                   multikrum_k: int | None = None,
+                   geomedian_iters: int = 8,
+                   backend: str = "xla") -> Aggregator:
+    """Return a unary ``(m, ...) -> (...)`` aggregation closure by name.
+
+    Thin compatibility wrapper over the registry: any rule registered via
+    ``@register_rule`` (including single-file plugins) resolves here.
+    Defaults to the pure-jnp path (this wrapper predates kernel dispatch and
+    its callers are reference/validation code); pass ``backend="auto"`` or
+    ``"pallas"`` to opt into declared kernels.
+    """
+    rule = make_rule(name, RuleParams(b=b, q=q, multikrum_k=multikrum_k,
+                                      geomedian_iters=geomedian_iters,
+                                      backend=backend))
+    return rule.reduce
 
 
+# Deprecated: static snapshots kept for backwards compatibility.  The source
+# of truth is the registry (registry.coordinate_wise_rules() / ...), which
+# also covers plugin rules.
 COORDINATE_WISE = frozenset({"mean", "median", "trmean", "phocas"})
 VECTOR_WISE = frozenset({"krum", "multikrum", "geomedian"})

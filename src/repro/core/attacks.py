@@ -7,14 +7,21 @@ point in the pipeline where the paper's transmission-medium corruption lands.
 
 Classic attacks corrupt whole rows (workers); dimensional attacks corrupt
 individual coordinates anywhere in the matrix (Definition 4).
+
+Each attack registers a factory with ``repro.core.registry`` via
+``@register_attack`` (recording its kind and the paper's Byzantine count);
+``make_attack`` resolves through the registry, so new attacks are
+single-file plugins exactly like aggregation rules.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, Optional
+from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
+
+from repro.core.registry import get_attack_spec, register_attack
 
 Attack = Callable[[jax.Array, jax.Array], jax.Array]  # (key, u) -> u_tilde
 
@@ -113,38 +120,63 @@ def gambler_attack(key: jax.Array, u: jax.Array,
     slice of the dimensions, any row."""
     m, d = u.shape
     server_size = max(1, d // num_servers)
-    kmask, = jax.random.split(key, 1)
-    hit = jax.random.bernoulli(kmask, prob, (m, server_size))
+    hit = jax.random.bernoulli(key, prob, (m, server_size))
     slice_ = u[:, :server_size]
     attacked = jnp.where(hit, scale * slice_, slice_)
     return u.at[:, :server_size].set(attacked)
 
 
 # ---------------------------------------------------------------------------
-# Dispatch
+# Registration + dispatch
 # ---------------------------------------------------------------------------
 
+@register_attack("gaussian", kind="classic", paper_q=6)
+def _gaussian(cfg: AttackConfig) -> Attack:
+    return lambda k, u: gaussian_attack(k, u, cfg.num_byzantine,
+                                        cfg.gaussian_std)
+
+
+@register_attack("omniscient", kind="classic", paper_q=6)
+def _omniscient(cfg: AttackConfig) -> Attack:
+    return lambda k, u: omniscient_attack(k, u, cfg.num_byzantine,
+                                          cfg.omniscient_scale)
+
+
+@register_attack("signflip", kind="classic", paper_q=6)
+def _signflip(cfg: AttackConfig) -> Attack:
+    return lambda k, u: signflip_attack(k, u, cfg.num_byzantine)
+
+
+@register_attack("zero", kind="classic", paper_q=6)
+def _zero(cfg: AttackConfig) -> Attack:
+    return lambda k, u: zero_attack(k, u, cfg.num_byzantine)
+
+
+@register_attack("bitflip", kind="dimensional", paper_q=1)
+def _bitflip(cfg: AttackConfig) -> Attack:
+    return lambda k, u: bitflip_attack(k, u, cfg.num_byzantine,
+                                       cfg.bitflip_dims, cfg.bitflip_bits)
+
+
+@register_attack("gambler", kind="dimensional", paper_q=0)
+def _gambler(cfg: AttackConfig) -> Attack:
+    return lambda k, u: gambler_attack(k, u, cfg.gambler_servers,
+                                       cfg.gambler_prob, cfg.gambler_scale)
+
+
 def make_attack(cfg: AttackConfig) -> Optional[Attack]:
-    """Build a ``(key, u) -> u_tilde`` closure from the config (None = clean)."""
+    """Build a ``(key, u) -> u_tilde`` closure from the config (None = clean).
+
+    Resolves through the attack registry: any ``@register_attack`` plugin
+    is reachable by its registered name.
+    """
     name = cfg.name.lower()
     if name in ("none", ""):
         return None
-    q = cfg.num_byzantine
-    table: Dict[str, Attack] = {
-        "gaussian": lambda k, u: gaussian_attack(k, u, q, cfg.gaussian_std),
-        "omniscient": lambda k, u: omniscient_attack(k, u, q, cfg.omniscient_scale),
-        "signflip": lambda k, u: signflip_attack(k, u, q),
-        "zero": lambda k, u: zero_attack(k, u, q),
-        "bitflip": lambda k, u: bitflip_attack(k, u, q, cfg.bitflip_dims,
-                                               cfg.bitflip_bits),
-        "gambler": lambda k, u: gambler_attack(k, u, cfg.gambler_servers,
-                                               cfg.gambler_prob,
-                                               cfg.gambler_scale),
-    }
-    if name not in table:
-        raise ValueError(f"unknown attack {cfg.name!r}; have {sorted(table)}")
-    return table[name]
+    return get_attack_spec(name).factory(cfg)
 
 
+# Deprecated: static snapshots kept for backwards compatibility — the source
+# of truth is registry.available_attacks(kind=...), which covers plugins.
 CLASSIC_ATTACKS = ("gaussian", "omniscient", "signflip", "zero")
 DIMENSIONAL_ATTACKS = ("bitflip", "gambler")

@@ -1,0 +1,246 @@
+"""Pluggable Rule/Attack registry — the aggregation stack's single dispatch
+point.
+
+The paper evaluates a *family* of aggregation rules against a *family* of
+attacks; its companion (Xie et al. 2018, "Generalized Byzantine-tolerant
+SGD") adds more of each.  This module makes both families open-ended:
+
+* A rule is a subclass of :class:`AggregatorRule` decorated with
+  :func:`register_rule`.  The class carries the metadata the rest of the
+  stack needs (``coordinate_wise``, ``resilience``, which parameters it
+  consumes, whether a Pallas kernel exists) and implements ``_reduce_xla``
+  (plus, optionally, ``_reduce_pallas`` and ``reduce_sharded``).  Everything
+  else — ``RobustConfig`` resolution, the distributed engine in
+  ``core/robust.py``, the train CLI, the fig2/fig3 benchmark sweeps, the
+  registry round-trip tests — enumerates the registry, so **adding a rule is
+  one new module + one ``@register_rule`` call** (see
+  ``repro/core/rules/mediam.py`` for the template).
+
+* An attack is a factory ``AttackConfig -> (key, u) -> u_tilde`` decorated
+  with :func:`register_attack`; the decorator records the attack's kind
+  (classic row-wise vs dimensional, Definition 4) and the Byzantine count
+  the paper's experiments use, which the benchmarks read back.
+
+Built-in rules/attacks register themselves when ``repro.core.aggregators`` /
+``repro.core.attacks`` / the ``repro.core.rules`` plugin package import;
+every lookup triggers those imports lazily, so the registry is populated no
+matter which module is imported first.
+
+Backend resolution replaces the old ``use_kernels`` bool: each rule resolves
+``backend="auto"|"pallas"|"xla"`` against its declared kernels —
+``"pallas"`` demands a kernel (and errors on rules without one), ``"xla"``
+forces the pure-jnp path, and ``"auto"`` picks the kernel exactly when one
+exists and the runtime backend is not the CPU interpreter.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, ClassVar, Dict, Optional, Sequence, Tuple, Type
+
+import jax
+
+Attack = Callable[[jax.Array, jax.Array], jax.Array]  # (key, u) -> u_tilde
+
+BACKENDS = ("auto", "pallas", "xla")
+
+
+@dataclasses.dataclass(frozen=True)
+class RuleParams:
+    """The union of per-rule parameters a registered rule may consume.
+
+    A thin, serializable value object: ``RobustConfig`` produces one, the
+    registry binds it to a rule class.  Each rule reads only the fields its
+    metadata declares (``uses_b`` / ``uses_q`` / ...).
+    """
+    b: int = 0                            # trim count (trmean/phocas family)
+    q: int = 0                            # assumed Byzantine count (Krum family)
+    multikrum_k: Optional[int] = None     # Multi-Krum selection size (None = m-q-2)
+    geomedian_iters: int = 8              # Weiszfeld iteration count
+    backend: str = "auto"                 # auto | pallas | xla
+
+
+class AggregatorRule:
+    """Base class for registered aggregation rules.
+
+    Subclass, set the metadata classvars, implement ``_reduce_xla`` (and
+    optionally ``_reduce_pallas`` with ``has_kernel = True``, and
+    ``reduce_sharded``), then decorate with :func:`register_rule`.
+
+    The ``reduce_sharded(mat, psum_axes)`` contract (DESIGN.md §6): called
+    inside ``shard_map`` on the (m, D_slice) worker matrix this device owns.
+    Coordinate-wise rules inherit the default (each coordinate is
+    independent, so the slice-local ``reduce`` is exact).  Vector-wise rules
+    MUST override it and ``psum`` their per-vector partial statistics
+    (pairwise distances, Weiszfeld weights, ...) over ``psum_axes`` so
+    selection sees full-vector geometry while outputs stay slice-local.
+    """
+
+    # --- metadata (override in subclasses) ---
+    name: ClassVar[str]
+    coordinate_wise: ClassVar[bool] = True
+    resilience: ClassVar[str] = "none"    # dimensional | classic | none
+    uses_b: ClassVar[bool] = False        # consumes RuleParams.b
+    uses_q: ClassVar[bool] = False        # consumes RuleParams.q
+    has_kernel: ClassVar[bool] = False    # declares a Pallas _reduce_pallas
+    supports_streaming: ClassVar[bool] = False  # train/streaming.py scan mode
+
+    def __init__(self, params: RuleParams = RuleParams()):
+        self.params = params
+        self.backend = resolve_backend(type(self), params.backend)
+
+    # --- public API ---
+
+    def reduce(self, u: jax.Array) -> jax.Array:
+        """Aggregate an (m, ...) worker matrix to (...)."""
+        if self.backend == "pallas":
+            return self._reduce_pallas(u)
+        return self._reduce_xla(u)
+
+    def reduce_sharded(self, mat: jax.Array,
+                       psum_axes: Sequence[str]) -> jax.Array:
+        """Aggregate this device's (m, D_slice) inside ``shard_map``."""
+        if not self.coordinate_wise and tuple(psum_axes):
+            raise NotImplementedError(
+                f"vector-wise rule {self.name!r} must override reduce_sharded "
+                "(its statistics need a psum over the sharded axes)")
+        return self.reduce(mat)
+
+    # --- implementations (override) ---
+
+    def _reduce_xla(self, u: jax.Array) -> jax.Array:
+        raise NotImplementedError
+
+    def _reduce_pallas(self, u: jax.Array) -> jax.Array:
+        raise NotImplementedError(
+            f"rule {self.name!r} sets has_kernel but lacks _reduce_pallas")
+
+
+def resolve_backend(rule_cls: Type[AggregatorRule], requested: str) -> str:
+    """Resolve a requested backend against the rule's declared kernels."""
+    if requested not in BACKENDS:
+        raise ValueError(f"unknown backend {requested!r}; have {BACKENDS}")
+    if requested == "pallas":
+        if not rule_cls.has_kernel:
+            raise ValueError(
+                f"backend='pallas' but rule {rule_cls.name!r} declares no "
+                f"kernel; rules with kernels: {kernel_rules()}")
+        return "pallas"
+    if requested == "xla":
+        return "xla"
+    # auto: use the kernel when one exists and Pallas would actually compile
+    # (on CPU it runs in interpret mode — strictly slower than XLA).
+    if rule_cls.has_kernel and jax.default_backend() != "cpu":
+        return "pallas"
+    return "xla"
+
+
+# ---------------------------------------------------------------------------
+# Rule registry
+# ---------------------------------------------------------------------------
+
+_RULES: Dict[str, Type[AggregatorRule]] = {}
+
+
+def register_rule(cls: Type[AggregatorRule]) -> Type[AggregatorRule]:
+    """Class decorator: make ``cls`` available to the whole stack by name."""
+    name = cls.name.lower()
+    prev = _RULES.get(name)
+    if prev is not None and prev is not cls:
+        raise ValueError(f"aggregation rule {name!r} already registered "
+                         f"by {prev.__module__}.{prev.__qualname__}")
+    _RULES[name] = cls
+    return cls
+
+
+def _ensure_builtins() -> None:
+    # Deferred: these modules import this one for the decorators.
+    import repro.core.aggregators  # noqa: F401
+    import repro.core.attacks      # noqa: F401
+    import repro.core.rules        # noqa: F401  (single-file plugins)
+
+
+def available_rules() -> Tuple[str, ...]:
+    _ensure_builtins()
+    return tuple(sorted(_RULES))
+
+
+def get_rule(name: str) -> Type[AggregatorRule]:
+    _ensure_builtins()
+    key = name.lower()
+    if key not in _RULES:
+        raise ValueError(f"unknown aggregation rule {name!r}; "
+                         f"have {sorted(_RULES)}")
+    return _RULES[key]
+
+
+def make_rule(name: str, params: RuleParams = RuleParams()) -> AggregatorRule:
+    return get_rule(name)(params)
+
+
+def coordinate_wise_rules() -> Tuple[str, ...]:
+    return tuple(n for n in available_rules() if _RULES[n].coordinate_wise)
+
+
+def vector_wise_rules() -> Tuple[str, ...]:
+    return tuple(n for n in available_rules() if not _RULES[n].coordinate_wise)
+
+
+def kernel_rules() -> Tuple[str, ...]:
+    return tuple(n for n in available_rules() if _RULES[n].has_kernel)
+
+
+def streaming_rules() -> Tuple[str, ...]:
+    return tuple(n for n in available_rules() if _RULES[n].supports_streaming)
+
+
+def robust_rules() -> Tuple[str, ...]:
+    """Rules with any resilience claim (classic or dimensional)."""
+    return tuple(n for n in available_rules()
+                 if _RULES[n].resilience != "none")
+
+
+# ---------------------------------------------------------------------------
+# Attack registry
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class AttackSpec:
+    """A registered attack: factory + the metadata the benchmarks read."""
+    name: str
+    factory: Callable[..., Attack]        # AttackConfig -> Attack closure
+    kind: str                             # classic | dimensional
+    paper_q: int = 0                      # Byzantine count in the paper's runs
+
+
+_ATTACKS: Dict[str, AttackSpec] = {}
+
+
+def register_attack(name: str, *, kind: str, paper_q: int = 0):
+    """Decorator for attack factories ``AttackConfig -> (key, u) -> u~``."""
+    if kind not in ("classic", "dimensional"):
+        raise ValueError(f"attack kind must be classic|dimensional, got {kind!r}")
+
+    def deco(factory):
+        key = name.lower()
+        prev = _ATTACKS.get(key)
+        if prev is not None and prev.factory is not factory:
+            raise ValueError(f"attack {key!r} already registered")
+        _ATTACKS[key] = AttackSpec(name=key, factory=factory, kind=kind,
+                                   paper_q=paper_q)
+        return factory
+
+    return deco
+
+
+def available_attacks(kind: Optional[str] = None) -> Tuple[str, ...]:
+    _ensure_builtins()
+    return tuple(n for n in sorted(_ATTACKS)
+                 if kind is None or _ATTACKS[n].kind == kind)
+
+
+def get_attack_spec(name: str) -> AttackSpec:
+    _ensure_builtins()
+    key = name.lower()
+    if key not in _ATTACKS:
+        raise ValueError(f"unknown attack {name!r}; have {sorted(_ATTACKS)}")
+    return _ATTACKS[key]

@@ -12,50 +12,78 @@ Two distributed layouts (see DESIGN.md §2):
   paper's own multi-server parameter partitioning (§5.1.4) turned into a TPU
   collective schedule; bytes ~ 2·D, aggregation compute 1/m.
 
-Both layouts support the coordinate-wise rules directly; Krum-family rules
-additionally ``psum`` partial pairwise squared distances over the worker axes
-(sharded) and over the ``model`` axis (tensor-parallel shards), so vector-wise
-selection sees full-vector geometry.
+Rule dispatch is fully registry-driven (DESIGN.md §6): ``RobustConfig`` is a
+thin serializable spec that resolves to a registered
+:class:`repro.core.registry.AggregatorRule`; both layouts simply call the
+rule's ``reduce_sharded(mat, psum_axes)`` hook.  Coordinate-wise rules
+inherit the slice-local default; vector-wise rules (Krum family, geomedian)
+``psum`` their partial per-vector statistics over the dim-sharded worker
+axes and the ``model`` (tensor-parallel) axes so selection sees full-vector
+geometry.  The engine itself knows no rule names.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Sequence, Tuple
+import warnings
+from typing import Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 from jax.flatten_util import ravel_pytree
 
-from repro.core import aggregators
+from repro.core import registry
 from repro.core.attacks import AttackConfig, make_attack
 from repro.dist.collectives import (
     all_to_all_scatter as _a2a_scatter,
     axis_size as _axis_size,
     gather_slices as _gather_slices,
     gather_workers as _gather_workers,
-    psum_axes as _psum_axes,
     worker_slice_index as _worker_slice_index,
 )
 
 
 @dataclasses.dataclass(frozen=True)
 class RobustConfig:
-    """Configuration of the robust-aggregation stage of ``train_step``."""
-    rule: str = "phocas"          # mean|median|trmean|phocas|krum|multikrum|geomedian
-    b: int = 2                    # trim parameter (trmean/phocas)
+    """Serializable spec of the robust-aggregation stage of ``train_step``.
+
+    ``rule`` names any registered aggregation rule (see
+    ``registry.available_rules()``); all rule parameters are plain fields so
+    the config round-trips through JSON/argparse, and ``rule_obj()`` resolves
+    the spec to a bound rule object through the registry.
+    """
+    rule: str = "phocas"          # any registered rule name
+    b: int = 2                    # trim parameter (trmean/phocas family)
     q: int = 2                    # assumed Byzantine count (krum family)
+    multikrum_k: Optional[int] = None  # Multi-Krum selection size (None = m-q-2)
+    geomedian_iters: int = 8      # Weiszfeld iteration count
     layout: str = "sharded"       # replicated | sharded
-    use_kernels: bool = False     # route trmean/phocas through Pallas ops
+    backend: str = "auto"         # auto | pallas | xla (per-rule resolution)
     agg_dtype: str = "float32"    # robust statistics dtype
     attack: AttackConfig = dataclasses.field(default_factory=AttackConfig)
+    # Deprecated alias for backend= (True -> "pallas", False -> "xla").
+    use_kernels: dataclasses.InitVar[Optional[bool]] = None
+
+    def __post_init__(self, use_kernels: Optional[bool]):
+        if use_kernels is not None:
+            warnings.warn(
+                "RobustConfig(use_kernels=...) is deprecated; use "
+                "backend='pallas'|'xla'|'auto'", DeprecationWarning,
+                stacklevel=3)
+            object.__setattr__(self, "backend",
+                               "pallas" if use_kernels else "xla")
+
+    def rule_params(self) -> registry.RuleParams:
+        return registry.RuleParams(
+            b=self.b, q=self.q, multikrum_k=self.multikrum_k,
+            geomedian_iters=self.geomedian_iters, backend=self.backend)
+
+    def rule_obj(self) -> registry.AggregatorRule:
+        """Resolve this spec to a bound rule object via the registry."""
+        return registry.make_rule(self.rule, self.rule_params())
 
     def aggregator(self):
-        if self.use_kernels and self.rule in ("trmean", "phocas"):
-            from repro.kernels import ops as kops  # lazy: avoid import cycle
-            if self.rule == "trmean":
-                return lambda u: kops.trmean(u, self.b)
-            return lambda u: kops.phocas(u, self.b)
-        return aggregators.get_aggregator(self.rule, b=self.b, q=self.q)
+        """Unary ``(m, ...) -> (...)`` closure (registry-resolved)."""
+        return self.rule_obj().reduce
 
 
 # ---------------------------------------------------------------------------
@@ -71,7 +99,7 @@ def aggregate_matrix(u: jax.Array, cfg: RobustConfig,
         if key is None:
             raise ValueError("attack configured but no PRNG key supplied")
         uf = attack(key, uf)
-    return cfg.aggregator()(uf)
+    return cfg.rule_obj().reduce(uf)
 
 
 def aggregate_stacked_tree(stacked, cfg: RobustConfig,
@@ -95,43 +123,6 @@ def aggregate_stacked_tree(stacked, cfg: RobustConfig,
 # Distributed path (must be called inside shard_map)
 # ---------------------------------------------------------------------------
 
-def _krum_select(mat: jax.Array, cfg: RobustConfig,
-                 psum_axes: Tuple[str, ...]) -> jax.Array:
-    """Krum-family selection with distance partial-sums psum'd over
-    ``psum_axes`` (dim-sharded and/or model-sharded portions)."""
-    m = mat.shape[0]
-    sq = jnp.sum(mat * mat, axis=1)
-    gram = mat @ mat.T
-    d2 = jnp.maximum(sq[:, None] + sq[None, :] - 2.0 * gram, 0.0)
-    d2 = _psum_axes(d2, psum_axes)
-    d2 = d2 + jnp.diag(jnp.full((m,), jnp.inf, d2.dtype))
-    k = m - cfg.q - 2
-    if k <= 0:
-        raise ValueError(f"Krum requires m-q-2 > 0 (m={m}, q={cfg.q})")
-    nearest = jnp.sort(d2, axis=1)[:, :k]
-    scores = jnp.sum(nearest, axis=1)
-    if cfg.rule == "krum":
-        return mat[jnp.argmin(scores)]
-    _, idx = jax.lax.top_k(-scores, k)   # multikrum
-    return jnp.mean(mat[idx], axis=0)
-
-
-def _geomedian_dist(mat: jax.Array, psum_axes: Tuple[str, ...],
-                    iters: int = 8, eps: float = 1e-8) -> jax.Array:
-    """Weiszfeld iterations on a dim-sharded (m, D_slice) matrix: partial
-    squared distances are psum'd over ``psum_axes`` so weights use the full
-    vector geometry while updates stay slice-local."""
-    def step(z, _):
-        d2 = jnp.sum((mat - z[None]) ** 2, axis=1)
-        d2 = _psum_axes(d2, psum_axes)
-        w = 1.0 / jnp.maximum(jnp.sqrt(d2), eps)
-        z_new = jnp.sum(mat * w[:, None], axis=0) / jnp.sum(w)
-        return z_new, None
-
-    z, _ = jax.lax.scan(step, jnp.mean(mat, axis=0), None, length=iters)
-    return z
-
-
 def robust_aggregate_dist(grad_tree, cfg: RobustConfig,
                           worker_axes: Sequence[str],
                           model_axes: Sequence[str] = (),
@@ -144,7 +135,8 @@ def robust_aggregate_dist(grad_tree, cfg: RobustConfig,
       cfg: robust config (rule, layout, simulated attack).
       worker_axes: mesh axes playing the paper's "worker" role, e.g.
         ``("data",)`` or ``("pod", "data")``.
-      model_axes: tensor-parallel axes (needed only by Krum-family distances).
+      model_axes: tensor-parallel axes (needed only by vector-wise rules'
+        partial-statistic psums).
       key: per-step PRNG key (replicated), required when an attack is set.
 
     Returns the aggregated gradient pytree with the input structure/dtypes.
@@ -159,18 +151,13 @@ def robust_aggregate_dist(grad_tree, cfg: RobustConfig,
         flat = jnp.pad(flat, (0, pad))
 
     attack = make_attack(cfg.attack)
-    vector_wise = cfg.rule in aggregators.VECTOR_WISE
+    rule = cfg.rule_obj()
 
     if cfg.layout == "replicated":
         mat = _gather_workers(flat, worker_axes)          # (m, D)
         if attack is not None:
             mat = attack(key, mat)
-        if cfg.rule == "geomedian":
-            agg = _geomedian_dist(mat, tuple(model_axes))
-        elif vector_wise:
-            agg = _krum_select(mat, cfg, tuple(model_axes))
-        else:
-            agg = cfg.aggregator()(mat)                   # (D,)
+        agg = rule.reduce_sharded(mat, tuple(model_axes))  # (D,)
     elif cfg.layout == "sharded":
         mat = _a2a_scatter(flat, worker_axes)             # (m, D/m)
         if attack is not None:
@@ -179,13 +166,8 @@ def robust_aggregate_dist(grad_tree, cfg: RobustConfig,
             key = jax.random.fold_in(key, _worker_slice_index(worker_axes)) \
                 if key is not None else None
             mat = attack(key, mat)
-        if cfg.rule == "geomedian":
-            agg_slice = _geomedian_dist(mat, worker_axes + tuple(model_axes))
-        elif vector_wise:
-            agg_slice = _krum_select(mat, cfg,
-                                     worker_axes + tuple(model_axes))
-        else:
-            agg_slice = cfg.aggregator()(mat)             # (D/m,)
+        agg_slice = rule.reduce_sharded(
+            mat, worker_axes + tuple(model_axes))         # (D/m,)
         agg = _gather_slices(agg_slice, worker_axes)      # (D,)
     else:
         raise ValueError(f"unknown layout {cfg.layout!r}")

@@ -1,0 +1,17 @@
+"""Single-file aggregation-rule plugins.
+
+Each module in this package defines ONE rule: an
+``repro.core.registry.AggregatorRule`` subclass with a ``@register_rule``
+decoration.  Every module here is imported automatically (below), and the
+registry imports this package lazily on any lookup — so **dropping a new
+file in this directory is all the wiring a rule needs**.  It then appears
+in ``get_aggregator``, ``RobustConfig`` resolution, the train CLI choices,
+the fig2/fig3 benchmark sweeps, and the registry round-trip tests.  Copy
+``mediam.py`` as the template.
+"""
+import importlib
+import pkgutil
+
+for _mod in pkgutil.iter_modules(__path__):
+    importlib.import_module(f"{__name__}.{_mod.name}")
+del importlib, pkgutil, _mod

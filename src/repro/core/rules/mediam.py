@@ -1,0 +1,43 @@
+"""Mean-around-median ("mediam") — Xie et al. 2018, "Generalized
+Byzantine-tolerant SGD" (the paper's companion).
+
+Per coordinate: take the coordinate-wise median as the center, keep the
+(m - b) values nearest to it, and average them.  Structurally Phocas
+(Definition 8) with the median replacing the b-trimmed mean as the center —
+the same dimensional resilience class, one fewer tunable (the median needs
+no trim parameter), slightly looser variance constant.
+
+This module is the single-file plugin template: the class below plus its
+``@register_rule`` decoration is ALL that is needed for the rule to appear
+in ``get_aggregator``, the train CLI, the fig2/fig3 sweeps, and the
+registry round-trip tests.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.registry import AggregatorRule, register_rule
+
+
+@register_rule
+class MeanAroundMedian(AggregatorRule):
+    name = "mediam"
+    coordinate_wise = True
+    resilience = "dimensional"
+    uses_b = True
+
+    def _reduce_xla(self, u: jax.Array) -> jax.Array:
+        m = u.shape[0]
+        b = self.params.b
+        if not 0 <= b <= (m + 1) // 2 - 1:
+            raise ValueError(f"b={b} out of range [0, ceil(m/2)-1] for m={m}")
+        uf = u.astype(jnp.float32) if u.dtype != jnp.float32 else u
+        if b == 0:
+            return jnp.mean(uf, axis=0)
+        center = jnp.median(uf, axis=0)
+        dist = jnp.abs(uf - center[None])
+        order = jnp.argsort(dist, axis=0)             # ascending distance
+        ranks = jnp.argsort(order, axis=0)            # per-coordinate rank
+        keep = (ranks < (m - b)).astype(uf.dtype)
+        return jnp.sum(uf * keep, axis=0) / (m - b)

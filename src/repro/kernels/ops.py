@@ -1,4 +1,8 @@
-"""Facade over the per-kernel ops modules (used by RobustConfig.use_kernels)."""
+"""Facade over the per-kernel ops modules.
+
+The registered rules (``repro.core.aggregators``) reach these through their
+``_reduce_pallas`` implementations when ``RobustConfig.backend`` resolves to
+``"pallas"``; the facade remains for direct kernel benchmarking."""
 from repro.kernels.trmean.ops import trmean  # noqa: F401
 from repro.kernels.phocas.ops import phocas  # noqa: F401
 from repro.kernels.krum.ops import krum, multikrum, pairwise_sq_dists  # noqa: F401

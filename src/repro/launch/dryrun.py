@@ -229,7 +229,9 @@ def main():
     ap.add_argument("--multi-pod", action="store_true")
     ap.add_argument("--layout", default="sharded",
                     choices=["replicated", "sharded"])
-    ap.add_argument("--rule", default="phocas")
+    from repro.core import registry
+    ap.add_argument("--rule", default="phocas",
+                    choices=registry.available_rules())
     ap.add_argument("--b", type=int, default=2)
     ap.add_argument("--remat", default="full",
                     choices=["none", "full", "dots"])

@@ -14,7 +14,7 @@ import argparse
 import jax
 
 from repro.configs import get_arch
-from repro.core import AttackConfig, RobustConfig
+from repro.core import AttackConfig, RobustConfig, registry
 from repro.data import TokenStream
 from repro.models import build_model
 from repro.optim import OptConfig
@@ -28,19 +28,32 @@ def main():
     ap.add_argument("--global-batch", type=int, default=40)
     ap.add_argument("--seq-len", type=int, default=64)
     ap.add_argument("--workers", type=int, default=20)
-    ap.add_argument("--rule", default="phocas")
+    ap.add_argument("--rule", default="phocas",
+                    choices=registry.available_rules())
     ap.add_argument("--b", type=int, default=2)
     ap.add_argument("--layout", default="sharded")
-    ap.add_argument("--attack", default="none")
+    ap.add_argument("--attack", default="none",
+                    choices=("none",) + registry.available_attacks())
     ap.add_argument("--q", type=int, default=0)
+    ap.add_argument("--multikrum-k", type=int, default=None,
+                    help="Multi-Krum selection size (default m-q-2)")
+    ap.add_argument("--geomedian-iters", type=int, default=8)
     ap.add_argument("--optimizer", default="sgd")
     ap.add_argument("--lr", type=float, default=0.1)
     ap.add_argument("--remat", default="none")
     ap.add_argument("--mesh", default="",
                     help="data×model, e.g. 4x2; empty = single device")
-    ap.add_argument("--use-kernels", action="store_true")
+    ap.add_argument("--backend", default="auto",
+                    choices=("auto", "pallas", "xla"),
+                    help="per-rule kernel dispatch (rules with kernels: "
+                         f"{', '.join(registry.kernel_rules())})")
+    ap.add_argument("--use-kernels", action="store_true",
+                    help="deprecated alias for --backend pallas")
     ap.add_argument("--checkpoint", default="")
     args = ap.parse_args()
+    if args.use_kernels:
+        print("[train] --use-kernels is deprecated; use --backend pallas")
+        args.backend = "pallas"
 
     cfg = get_arch(args.arch)
     model = build_model(cfg, remat=args.remat)
@@ -55,7 +68,8 @@ def main():
 
     robust = RobustConfig(
         rule=args.rule, b=args.b, q=args.q or args.b, layout=args.layout,
-        use_kernels=args.use_kernels,
+        multikrum_k=args.multikrum_k, geomedian_iters=args.geomedian_iters,
+        backend=args.backend,
         attack=AttackConfig(name=args.attack, num_byzantine=args.q))
     opt = OptConfig(name=args.optimizer, lr=args.lr)
     tcfg = TrainerConfig(num_workers=args.workers, steps=args.steps,

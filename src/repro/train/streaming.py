@@ -32,6 +32,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh
 
+from repro.core import registry
 from repro.core.attacks import AttackConfig, _flip_bits_f32
 from repro.core.robust import RobustConfig
 from repro.optim.optimizers import OptConfig, apply_updates
@@ -110,9 +111,10 @@ def make_streaming_train_step(model, *, robust_cfg: RobustConfig,
     m = num_workers
     b = robust_cfg.b
     rule = robust_cfg.rule
-    if rule not in ("trmean", "phocas", "mean"):
-        raise ValueError("streaming mode supports mean/trmean/phocas, got "
-                         f"{rule!r}")
+    if not registry.get_rule(rule).supports_streaming:
+        raise ValueError(
+            f"streaming mode supports {registry.streaming_rules()}, got "
+            f"{rule!r} (rules opt in via supports_streaming=True)")
     if not 0 <= b <= (m + 1) // 2 - 1:
         raise ValueError(f"b={b} out of range for m={m}")
 

@@ -16,12 +16,12 @@ DIM, CLASSES = 64, 10
 
 
 def run_training(rule, attack, *, b=6, q=6, steps=60, lr=0.1,
-                 use_kernels=False):
+                 backend="xla"):
     data = ClassificationData(num_classes=CLASSES, dim=DIM, noise=0.8, seed=1)
     model = build_mlp_model(dims=(DIM, 64, CLASSES))
     params = model.init(jax.random.PRNGKey(0))
     opt_cfg = OptConfig(name="sgd", lr=lr)
-    rob = RobustConfig(rule=rule, b=b, q=q, use_kernels=use_kernels,
+    rob = RobustConfig(rule=rule, b=b, q=q, backend=backend,
                        attack=attack)
     step = make_train_step(model, robust_cfg=rob, opt_cfg=opt_cfg,
                            num_workers=M, mesh=None, donate=False)
@@ -87,9 +87,9 @@ def test_gambler_trmean_survives():
 
 
 def test_kernel_backed_training_matches_ref():
-    """use_kernels=True (Pallas interpret) trains identically."""
+    """backend='pallas' (interpret mode on CPU) trains identically."""
     a1, _ = run_training("phocas", GAUSS, steps=25)
-    a2, _ = run_training("phocas", GAUSS, steps=25, use_kernels=True)
+    a2, _ = run_training("phocas", GAUSS, steps=25, backend="pallas")
     assert abs(a1 - a2) < 0.05, (a1, a2)
 
 
