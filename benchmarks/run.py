@@ -1,21 +1,36 @@
 """Benchmark entry point: one function per paper table/figure.
-Prints ``name,us_per_call,derived`` CSV lines.
+Prints ``name,us_per_call,derived`` CSV lines AND persists each
+benchmark's rows as a machine-readable ``BENCH_<name>.json`` perf/quality
+summary at the repo root (the artifact CI and trajectory tooling consume).
 
-  python -m benchmarks.run [--full] [--only fig2,roofline,...]
+  python -m benchmarks.run [--full] [--only fig2,detection,...]
 """
 from __future__ import annotations
 
 import argparse
+import json
+import os
 import time
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 
 def _run(name, fn, rows_to_csv):
+    # Shared converter with the telemetry JSONL records: jax/numpy values
+    # become plain types, non-finite floats become repr strings, so the
+    # artifact stays strict JSON for any consumer.
+    from repro.defense.telemetry import jsonify
     t0 = time.time()
     rows = fn()
     us = (time.time() - t0) * 1e6
     for line in rows_to_csv(rows):
         print(line, flush=True)
     print(f"{name},{us:.0f},done", flush=True)
+    out = os.path.join(REPO_ROOT, f"BENCH_{name}.json")
+    with open(out, "w") as f:
+        json.dump(jsonify({"name": name, "wall_us": round(us),
+                           "rows": rows}), f, indent=1, allow_nan=False)
+    print(f"{name},0,wrote {os.path.basename(out)}", flush=True)
     return rows
 
 
@@ -59,6 +74,18 @@ def main(full: bool = False, only: str = "") -> None:
              lambda rows: [
                  f"fig4/bs{r['batch']}/{r['rule']},0,"
                  f"final_acc={r['final_acc']:.4f}" for r in rows])
+
+    if pick("detection"):
+        from benchmarks.fig_detection import main as f
+
+        def _fmt(v):
+            return "na" if v is None else f"{v:.2f}"
+
+        _run("detection", lambda: f(full=full),
+             lambda rows: [
+                 f"detection/{r['attack']}/{r['rule']}/q{r['q']},0,"
+                 f"prec={_fmt(r['precision'])};rec={_fmt(r['recall'])};"
+                 f"qhat={r['q_hat']}" for r in rows])
 
     if pick("survival"):
         from benchmarks.survival import main as f

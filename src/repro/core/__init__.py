@@ -12,7 +12,7 @@ from repro.core.aggregators import (  # noqa: F401
 from repro.core.attacks import AttackConfig, make_attack  # noqa: F401
 from repro.core import rules  # noqa: F401  (single-file rule plugins)
 from repro.core.robust import (  # noqa: F401
-    RobustConfig, aggregate_matrix, aggregate_stacked_tree,
+    RobustConfig, aggregate_matrix, aggregate_stacked_tree, gate_matrix,
     robust_aggregate_dist,
 )
 from repro.core import bounds  # noqa: F401

@@ -24,12 +24,15 @@ single-file plugins under ``repro/core/rules/``.
 """
 from __future__ import annotations
 
-from typing import Callable, Sequence
+import math
+from typing import Callable, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.registry import (AggregatorRule, RuleParams, make_rule,
+from repro.core.registry import (AggregatorRule, RuleParams,
+                                 distance_ratio_scores,
+                                 drop_frequency_scores, make_rule,
                                  register_rule)
 
 Aggregator = Callable[..., jax.Array]
@@ -83,6 +86,72 @@ def phocas(u: jax.Array, b: int) -> jax.Array:
     ranks = jnp.argsort(order, axis=0)  # rank of each entry per coordinate
     keep = (ranks < (m - b)).astype(uf.dtype)
     return jnp.sum(uf * keep, axis=0) / (m - b)
+
+
+# ---------------------------------------------------------------------------
+# Coordinate-wise selection statistics (defense suspicion signal)
+# ---------------------------------------------------------------------------
+
+def _ncoords_of(u: jax.Array) -> jax.Array:
+    """Static count of coordinates per worker (trailing-shape product)."""
+    return jnp.float32(math.prod(u.shape[1:]) or 1)
+
+
+def trmean_stats(u: jax.Array, b: int) -> Tuple[jax.Array, jax.Array,
+                                                jax.Array]:
+    """Trimmed mean + its selection mask: ``(agg, drop_counts, ncoords)``.
+
+    ``drop_counts[i]`` = number of coordinates where worker i's value was
+    among the b smallest or b largest (i.e. trimmed away).  The aggregate
+    is :func:`trmean` itself (single source — the rank mask exists only
+    for the counts; XLA CSEs the shared sort).
+    """
+    m = u.shape[0]
+    uf = _as_f32(u)
+    agg = trmean(uf, b)
+    if b == 0:
+        return agg, jnp.zeros((m,), jnp.float32), _ncoords_of(u)
+    ranks = jnp.argsort(jnp.argsort(uf, axis=0), axis=0)
+    dropped = (ranks < b) | (ranks >= m - b)
+    counts = jnp.sum(dropped, axis=tuple(range(1, uf.ndim))
+                     ).astype(jnp.float32)
+    return agg, counts, _ncoords_of(u)
+
+
+def phocas_stats(u: jax.Array, b: int) -> Tuple[jax.Array, jax.Array,
+                                                jax.Array]:
+    """Phocas + its selection mask: ``(agg, drop_counts, ncoords)`` where
+    ``drop_counts[i]`` counts coordinates where worker i was among the b
+    values farthest from the trimmed mean (dropped by Definition 8).  The
+    aggregate is :func:`phocas` itself (single source — the rank mask
+    exists only for the counts; XLA CSEs the shared center/distances)."""
+    m = u.shape[0]
+    uf = _as_f32(u)
+    agg = phocas(uf, b)
+    if b == 0:
+        return agg, jnp.zeros((m,), jnp.float32), _ncoords_of(u)
+    center = trmean(uf, b)
+    dist = jnp.abs(uf - center[None])
+    ranks = jnp.argsort(jnp.argsort(dist, axis=0), axis=0)
+    dropped = ranks >= (m - b)
+    counts = jnp.sum(dropped, axis=tuple(range(1, uf.ndim))
+                     ).astype(jnp.float32)
+    return agg, counts, _ncoords_of(u)
+
+
+def trim_mask_scores(stats_fn, mat: jax.Array, b: int, baseline: float,
+                     psum_axes: Sequence[str]):
+    """Shared sharded-score plumbing for the trim-mask rules (used by the
+    built-ins below AND plugin rules like ``rules/mediam.py``): compute the
+    slice-local selection statistics via ``stats_fn(mat, b) -> (agg,
+    drop_counts, ncoords)``, psum counts AND coordinate totals over
+    ``psum_axes`` (dim-sharded worker axes + model axes), normalize."""
+    from repro.dist.collectives import psum_axes as _psum
+    agg, counts, ncoords = stats_fn(mat, b)
+    axes = tuple(psum_axes)
+    counts = _psum(counts, axes)
+    ncoords = _psum(ncoords, axes)
+    return agg, drop_frequency_scores(counts, ncoords, baseline)
 
 
 # ---------------------------------------------------------------------------
@@ -169,10 +238,15 @@ def krum_scores_sharded(mat: jax.Array, q: int,
 
 
 def geomedian_sharded(mat: jax.Array, psum_axes: Sequence[str],
-                      iters: int = 8, eps: float = 1e-8) -> jax.Array:
+                      iters: int = 8, eps: float = 1e-8,
+                      with_dists: bool = False):
     """Weiszfeld iterations on a dim-sharded (m, D_slice) matrix: partial
     squared distances are psum'd over ``psum_axes`` so weights use the full
-    vector geometry while updates stay slice-local."""
+    vector geometry while updates stay slice-local.
+
+    With ``with_dists=True`` also returns each worker's full-vector
+    distance to the final iterate (psum'd — the inverse of the Weiszfeld
+    weight, the rule's per-worker suspicion statistic)."""
     from repro.dist.collectives import psum_axes as _psum
 
     def step(z, _):
@@ -183,7 +257,10 @@ def geomedian_sharded(mat: jax.Array, psum_axes: Sequence[str],
         return z_new, None
 
     z, _ = jax.lax.scan(step, jnp.mean(mat, axis=0), None, length=iters)
-    return z
+    if not with_dists:
+        return z
+    d2 = _psum(jnp.sum((mat - z[None]) ** 2, axis=1), tuple(psum_axes))
+    return z, jnp.sqrt(d2)
 
 
 # ---------------------------------------------------------------------------
@@ -222,6 +299,7 @@ class TrmeanRule(AggregatorRule):
     uses_b = True
     has_kernel = True
     supports_streaming = True
+    emits_scores = True
 
     def _reduce_xla(self, u):
         return trmean(u, self.params.b)
@@ -229,6 +307,12 @@ class TrmeanRule(AggregatorRule):
     def _reduce_pallas(self, u):
         from repro.kernels.trmean.ops import trmean as ktrmean
         return ktrmean(u, self.params.b)
+
+    def reduce_sharded_with_scores(self, mat, psum_axes):
+        # benign baseline: each coordinate trims exactly 2b of m values
+        return trim_mask_scores(trmean_stats, mat, self.params.b,
+                                 2.0 * self.params.b / mat.shape[0],
+                                 psum_axes)
 
 
 @register_rule
@@ -240,6 +324,7 @@ class PhocasRule(AggregatorRule):
     uses_b = True
     has_kernel = True
     supports_streaming = True
+    emits_scores = True
 
     def _reduce_xla(self, u):
         return phocas(u, self.params.b)
@@ -247,6 +332,12 @@ class PhocasRule(AggregatorRule):
     def _reduce_pallas(self, u):
         from repro.kernels.phocas.ops import phocas as kphocas
         return kphocas(u, self.params.b)
+
+    def reduce_sharded_with_scores(self, mat, psum_axes):
+        # benign baseline: each coordinate drops the b farthest of m values
+        return trim_mask_scores(phocas_stats, mat, self.params.b,
+                                 float(self.params.b) / mat.shape[0],
+                                 psum_axes)
 
 
 @register_rule
@@ -257,6 +348,7 @@ class KrumRule(AggregatorRule):
     resilience = "classic"
     uses_q = True
     has_kernel = True
+    emits_scores = True
 
     def _reduce_xla(self, u):
         return krum(u, self.params.q)
@@ -269,6 +361,10 @@ class KrumRule(AggregatorRule):
         scores = krum_scores_sharded(mat, self.params.q, psum_axes)
         return mat[jnp.argmin(scores)]
 
+    def reduce_sharded_with_scores(self, mat, psum_axes):
+        raw = krum_scores_sharded(mat, self.params.q, psum_axes)
+        return mat[jnp.argmin(raw)], distance_ratio_scores(raw)
+
 
 @register_rule
 class MultikrumRule(AggregatorRule):
@@ -278,6 +374,7 @@ class MultikrumRule(AggregatorRule):
     resilience = "classic"
     uses_q = True
     has_kernel = True
+    emits_scores = True
 
     def _k(self, m: int) -> int:
         k = self.params.multikrum_k
@@ -295,6 +392,11 @@ class MultikrumRule(AggregatorRule):
         _, idx = jax.lax.top_k(-scores, self._k(mat.shape[0]))
         return jnp.mean(mat[idx], axis=0)
 
+    def reduce_sharded_with_scores(self, mat, psum_axes):
+        raw = krum_scores_sharded(mat, self.params.q, psum_axes)
+        _, idx = jax.lax.top_k(-raw, self._k(mat.shape[0]))
+        return jnp.mean(mat[idx], axis=0), distance_ratio_scores(raw)
+
 
 @register_rule
 class GeomedianRule(AggregatorRule):
@@ -302,6 +404,7 @@ class GeomedianRule(AggregatorRule):
     name = "geomedian"
     coordinate_wise = False
     resilience = "classic"
+    emits_scores = True
 
     def _reduce_xla(self, u):
         return geomedian(u, iters=self.params.geomedian_iters)
@@ -309,6 +412,13 @@ class GeomedianRule(AggregatorRule):
     def reduce_sharded(self, mat, psum_axes):
         return geomedian_sharded(mat, psum_axes,
                                  iters=self.params.geomedian_iters)
+
+    def reduce_sharded_with_scores(self, mat, psum_axes):
+        # Weiszfeld weight = 1/distance: far (down-weighted) == suspicious.
+        z, dists = geomedian_sharded(mat, psum_axes,
+                                     iters=self.params.geomedian_iters,
+                                     with_dists=True)
+        return z, distance_ratio_scores(dists)
 
 
 # ---------------------------------------------------------------------------

@@ -38,6 +38,7 @@ class AttackConfig:
     gambler_servers: int = 20          # paper: 20 servers
     gambler_prob: float = 0.0005       # paper: 0.05%
     gambler_scale: float = -1e20
+    innerprod_scale: float = 2.0       # Fall-of-Empires epsilon
 
 
 # ---------------------------------------------------------------------------
@@ -72,6 +73,27 @@ def zero_attack(key: jax.Array, u: jax.Array, q: int) -> jax.Array:
     """Beyond-paper: first q rows zeroed (crash-stop workers)."""
     del key
     return u.at[:q].set(0.0)
+
+
+def innerprod_attack(key: jax.Array, u: jax.Array, q: int,
+                     scale: float = 2.0) -> jax.Array:
+    """Inner-product manipulation ("Fall of Empires", Xie et al. 2019).
+
+    The q Byzantine workers collude: each submits ``-eps * mean(correct
+    gradients)``.  Unlike the omniscient attack's 1e20 blow-up, ``eps`` is
+    O(1), so every Byzantine row has a *benign-looking norm* — it evades
+    magnitude-based filtering — while being engineered to drag the
+    aggregate's inner product with the true gradient toward/below zero
+    (the condition that breaks SGD convergence).  Because the q rows are
+    mutually identical they also form the tightest cluster in the matrix,
+    the adaptive trap for pairwise-distance rules the paper describes.
+    This is the adversary the ``repro.defense`` detector is evaluated
+    against (benchmarks/fig_detection.py).
+    """
+    del key
+    correct_mean = jnp.mean(u[q:], axis=0, keepdims=True)
+    byz = -scale * correct_mean
+    return u.at[:q].set(jnp.broadcast_to(byz, (q, u.shape[1])))
 
 
 # ---------------------------------------------------------------------------
@@ -152,6 +174,12 @@ def _zero(cfg: AttackConfig) -> Attack:
     return lambda k, u: zero_attack(k, u, cfg.num_byzantine)
 
 
+@register_attack("innerprod", kind="classic", paper_q=6)
+def _innerprod(cfg: AttackConfig) -> Attack:
+    return lambda k, u: innerprod_attack(k, u, cfg.num_byzantine,
+                                         cfg.innerprod_scale)
+
+
 @register_attack("bitflip", kind="dimensional", paper_q=1)
 def _bitflip(cfg: AttackConfig) -> Attack:
     return lambda k, u: bitflip_attack(k, u, cfg.num_byzantine,
@@ -178,5 +206,5 @@ def make_attack(cfg: AttackConfig) -> Optional[Attack]:
 
 # Deprecated: static snapshots kept for backwards compatibility — the source
 # of truth is registry.available_attacks(kind=...), which covers plugins.
-CLASSIC_ATTACKS = ("gaussian", "omniscient", "signflip", "zero")
+CLASSIC_ATTACKS = ("gaussian", "omniscient", "signflip", "zero", "innerprod")
 DIMENSIONAL_ATTACKS = ("bitflip", "gambler")

@@ -38,6 +38,7 @@ import dataclasses
 from typing import Callable, ClassVar, Dict, Optional, Sequence, Tuple, Type
 
 import jax
+import jax.numpy as jnp
 
 Attack = Callable[[jax.Array, jax.Array], jax.Array]  # (key, u) -> u_tilde
 
@@ -83,6 +84,7 @@ class AggregatorRule:
     uses_q: ClassVar[bool] = False        # consumes RuleParams.q
     has_kernel: ClassVar[bool] = False    # declares a Pallas _reduce_pallas
     supports_streaming: ClassVar[bool] = False  # train/streaming.py scan mode
+    emits_scores: ClassVar[bool] = False  # informative reduce_with_scores
 
     def __init__(self, params: RuleParams = RuleParams()):
         self.params = params
@@ -105,6 +107,32 @@ class AggregatorRule:
                 "(its statistics need a psum over the sharded axes)")
         return self.reduce(mat)
 
+    def reduce_with_scores(self, u: jax.Array) -> Tuple[jax.Array, jax.Array]:
+        """Aggregate an (m, ...) matrix AND emit per-worker suspicion scores.
+
+        Returns ``(agg, scores)`` where ``scores`` has shape ``(m,)``, lies
+        in ``[0, 1]``, and larger means more suspicious (``repro.defense``
+        score contract, DESIGN.md §7).  Rules whose internal statistics
+        carry a per-worker signal — which values the trim step dropped, the
+        Krum pairwise-distance sums, the Weiszfeld weights — override
+        :meth:`reduce_sharded_with_scores` and set ``emits_scores = True``;
+        everything else (``mean``, ...) inherits this uninformative uniform
+        default (all-zero scores).
+        """
+        return self.reduce_sharded_with_scores(u, ())
+
+    def reduce_sharded_with_scores(
+            self, mat: jax.Array,
+            psum_axes: Sequence[str]) -> Tuple[jax.Array, jax.Array]:
+        """Sharded analogue of :meth:`reduce_with_scores`: called inside
+        ``shard_map`` on this device's (m, D_slice) matrix.  Returned scores
+        MUST already be psum'd over ``psum_axes`` (the dimension-sharded
+        worker axes plus the model axes) so every device holds identical
+        *global* per-worker suspicion — the same contract the Krum partial
+        distances follow.  Empty ``psum_axes`` = the single-device call."""
+        agg = self.reduce_sharded(mat, psum_axes)
+        return agg, jnp.zeros((mat.shape[0],), jnp.float32)
+
     # --- implementations (override) ---
 
     def _reduce_xla(self, u: jax.Array) -> jax.Array:
@@ -113,6 +141,47 @@ class AggregatorRule:
     def _reduce_pallas(self, u: jax.Array) -> jax.Array:
         raise NotImplementedError(
             f"rule {self.name!r} sets has_kernel but lacks _reduce_pallas")
+
+
+# ---------------------------------------------------------------------------
+# Suspicion-score contract (DESIGN.md §7)
+# ---------------------------------------------------------------------------
+# Scores returned by reduce_with_scores / reduce_sharded_with_scores have
+# shape (m,), live in [0, 1]; 0 = conforming, 1 = maximally suspicious.  In
+# sharded layouts the raw statistics are psum'd BEFORE normalization.  The
+# normalizers live here (not in repro.defense) so the core import graph
+# stays closed — repro.defense.scores re-exports them.
+
+def drop_frequency_scores(drop_counts: jax.Array, ncoords: jax.Array,
+                          baseline: float) -> jax.Array:
+    """Normalize per-worker trim/drop counts into suspicion scores.
+
+    ``drop_counts[i]`` = number of coordinates where worker i's value was
+    dropped by the rule's selection step; ``ncoords`` = total coordinates
+    counted (both already psum'd in sharded layouts).  ``baseline`` is the
+    frequency an exchangeable benign worker expects (trmean drops exactly
+    2b of m values per coordinate -> 2b/m; phocas/mediam drop b -> b/m), so
+    benign workers land near 0 and a consistently-trimmed Byzantine worker
+    near 1.
+    """
+    freq = drop_counts / jnp.maximum(ncoords, 1.0)
+    denom = jnp.maximum(1.0 - baseline, 1e-6)
+    return jnp.clip((freq - baseline) / denom, 0.0, 1.0)
+
+
+def distance_ratio_scores(raw: jax.Array, eps: float = 1e-12) -> jax.Array:
+    """Normalize nonnegative per-worker distance statistics (Krum score
+    sums, Weiszfeld distances) into suspicion scores.
+
+    Distance statistics have multiplicative, scale-free spread, so the
+    robust reference is the median: ``1 - median/raw`` maps the median
+    worker to 0 and far outliers toward 1.  A degenerate distribution
+    (median ~ 0, e.g. a clean all-identical matrix) yields all-zero scores
+    rather than amplifying noise.
+    """
+    med = jnp.median(raw)
+    s = jnp.clip(1.0 - med / jnp.maximum(raw, eps), 0.0, 1.0)
+    return jnp.where(med <= eps, jnp.zeros_like(s), s)
 
 
 def resolve_backend(rule_cls: Type[AggregatorRule], requested: str) -> str:
@@ -191,6 +260,11 @@ def kernel_rules() -> Tuple[str, ...]:
 
 def streaming_rules() -> Tuple[str, ...]:
     return tuple(n for n in available_rules() if _RULES[n].supports_streaming)
+
+
+def score_rules() -> Tuple[str, ...]:
+    """Rules whose ``reduce_with_scores`` emits informative suspicion."""
+    return tuple(n for n in available_rules() if _RULES[n].emits_scores)
 
 
 def robust_rules() -> Tuple[str, ...]:

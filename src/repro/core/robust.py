@@ -87,27 +87,69 @@ class RobustConfig:
 
 
 # ---------------------------------------------------------------------------
+# Reputation gate (repro.defense adaptive aggregation)
+# ---------------------------------------------------------------------------
+
+def gate_matrix(mat: jax.Array, active: jax.Array) -> jax.Array:
+    """Replace ejected workers' rows before the rule runs.
+
+    ``active`` is the (m,) 0/1 mask from the reputation state
+    (``repro.defense.reputation``).  Ejected rows are replaced with the
+    coordinate-wise median of the matrix — a dimensional-robust proxy that
+    is exact slice-locally in both collective layouts, so the gate composes
+    with ``shard_map`` without extra collectives.  The rule still sees m
+    rows (its b/q parameters keep their meaning) but an ejected worker's
+    values can no longer move any order statistic beyond the median."""
+    med = jnp.median(mat, axis=0)
+    keep = active.reshape((mat.shape[0],) + (1,) * (mat.ndim - 1))
+    return jnp.where(keep > 0, mat, med[None].astype(mat.dtype))
+
+
+# ---------------------------------------------------------------------------
 # Local (single host / test) path
 # ---------------------------------------------------------------------------
 
 def aggregate_matrix(u: jax.Array, cfg: RobustConfig,
-                     key: Optional[jax.Array] = None) -> jax.Array:
-    """Aggregate an (m, d) worker matrix, optionally injecting the attack."""
+                     key: Optional[jax.Array] = None, *,
+                     active: Optional[jax.Array] = None,
+                     with_scores: bool = False):
+    """Aggregate an (m, d) worker matrix, optionally injecting the attack.
+
+    ``active`` applies the reputation gate (after the attack — the defense
+    never sees pre-corruption data); ``with_scores=True`` returns
+    ``(agg, scores)`` via the rule's ``reduce_with_scores`` hook.
+
+    Scoring always observes the RAW submissions while the aggregate uses
+    the gated matrix: if ejected rows were also replaced for scoring, an
+    ejected worker would instantly look conforming, recover reputation,
+    and be readmitted while still misbehaving (eject/readmit flapping).
+    Readmission must be earned by actually-clean submissions."""
     attack = make_attack(cfg.attack)
     uf = u.astype(cfg.agg_dtype)
     if attack is not None:
         if key is None:
             raise ValueError("attack configured but no PRNG key supplied")
         uf = attack(key, uf)
-    return cfg.rule_obj().reduce(uf)
+    rule = cfg.rule_obj()
+    if with_scores:
+        agg, scores = rule.reduce_with_scores(uf)
+        if active is not None:
+            agg = rule.reduce(gate_matrix(uf, active))
+        return agg, scores
+    if active is not None:
+        uf = gate_matrix(uf, active)
+    return rule.reduce(uf)
 
 
 def aggregate_stacked_tree(stacked, cfg: RobustConfig,
-                           key: Optional[jax.Array] = None):
+                           key: Optional[jax.Array] = None, *,
+                           active: Optional[jax.Array] = None,
+                           with_scores: bool = False):
     """Aggregate a pytree whose leaves are stacked (m, *leaf_shape) arrays.
 
     Flattens to a single (m, D) matrix so vector-wise rules (krum) see full
-    gradient geometry, then unflattens the aggregated vector.
+    gradient geometry, then unflattens the aggregated vector.  With
+    ``with_scores=True`` returns ``(tree, scores)``.
     """
     leaves = jax.tree_util.tree_leaves(stacked)
     m = leaves[0].shape[0]
@@ -115,8 +157,12 @@ def aggregate_stacked_tree(stacked, cfg: RobustConfig,
     flat0, unravel = ravel_pytree(jax.tree.map(lambda x: x[0], stacked))
     mat = jax.vmap(lambda i: ravel_pytree(
         jax.tree.map(lambda x: x[i], stacked))[0])(jnp.arange(m))
-    agg = aggregate_matrix(mat, cfg, key)
-    return unravel(agg.astype(flat0.dtype))
+    out = aggregate_matrix(mat, cfg, key, active=active,
+                           with_scores=with_scores)
+    if with_scores:
+        agg, scores = out
+        return unravel(agg.astype(flat0.dtype)), scores
+    return unravel(out.astype(flat0.dtype))
 
 
 # ---------------------------------------------------------------------------
@@ -126,7 +172,9 @@ def aggregate_stacked_tree(stacked, cfg: RobustConfig,
 def robust_aggregate_dist(grad_tree, cfg: RobustConfig,
                           worker_axes: Sequence[str],
                           model_axes: Sequence[str] = (),
-                          key: Optional[jax.Array] = None):
+                          key: Optional[jax.Array] = None,
+                          active: Optional[jax.Array] = None,
+                          with_scores: bool = False):
     """Aggregate per-worker gradient pytrees inside ``shard_map``.
 
     Args:
@@ -138,8 +186,14 @@ def robust_aggregate_dist(grad_tree, cfg: RobustConfig,
       model_axes: tensor-parallel axes (needed only by vector-wise rules'
         partial-statistic psums).
       key: per-step PRNG key (replicated), required when an attack is set.
+      active: replicated (m,) reputation mask — ejected workers' rows are
+        gated (``gate_matrix``) before the rule runs.
+      with_scores: also return the rule's per-worker suspicion scores,
+        psum'd over the layout's sharded axes so they come back replicated
+        (the ``repro.defense`` contract, DESIGN.md §7).
 
-    Returns the aggregated gradient pytree with the input structure/dtypes.
+    Returns the aggregated gradient pytree with the input structure/dtypes
+    (plus the (m,) scores when ``with_scores``).
     """
     worker_axes = tuple(worker_axes)
     m = _axis_size(worker_axes)
@@ -153,11 +207,24 @@ def robust_aggregate_dist(grad_tree, cfg: RobustConfig,
     attack = make_attack(cfg.attack)
     rule = cfg.rule_obj()
 
+    def _reduce(mat, psum_axes):
+        # Scores observe RAW submissions; the aggregate uses the gated
+        # matrix (see aggregate_matrix: prevents eject/readmit flapping).
+        if with_scores:
+            agg, scores = rule.reduce_sharded_with_scores(mat, psum_axes)
+            if active is not None:
+                agg = rule.reduce_sharded(gate_matrix(mat, active),
+                                          psum_axes)
+            return agg, scores
+        if active is not None:
+            mat = gate_matrix(mat, active)
+        return rule.reduce_sharded(mat, psum_axes), None
+
     if cfg.layout == "replicated":
         mat = _gather_workers(flat, worker_axes)          # (m, D)
         if attack is not None:
             mat = attack(key, mat)
-        agg = rule.reduce_sharded(mat, tuple(model_axes))  # (D,)
+        agg, scores = _reduce(mat, tuple(model_axes))      # (D,)
     elif cfg.layout == "sharded":
         mat = _a2a_scatter(flat, worker_axes)             # (m, D/m)
         if attack is not None:
@@ -166,7 +233,7 @@ def robust_aggregate_dist(grad_tree, cfg: RobustConfig,
             key = jax.random.fold_in(key, _worker_slice_index(worker_axes)) \
                 if key is not None else None
             mat = attack(key, mat)
-        agg_slice = rule.reduce_sharded(
+        agg_slice, scores = _reduce(
             mat, worker_axes + tuple(model_axes))         # (D/m,)
         agg = _gather_slices(agg_slice, worker_axes)      # (D,)
     else:
@@ -174,4 +241,7 @@ def robust_aggregate_dist(grad_tree, cfg: RobustConfig,
 
     if pad:
         agg = agg[:d]
-    return unravel(agg.astype(ravel_pytree(grad_tree)[0].dtype))
+    agg_tree = unravel(agg.astype(ravel_pytree(grad_tree)[0].dtype))
+    if with_scores:
+        return agg_tree, scores
+    return agg_tree

@@ -26,18 +26,35 @@ class MeanAroundMedian(AggregatorRule):
     coordinate_wise = True
     resilience = "dimensional"
     uses_b = True
+    emits_scores = True
 
-    def _reduce_xla(self, u: jax.Array) -> jax.Array:
+    @staticmethod
+    def _stats(u: jax.Array, b: int):
+        """(agg, drop_counts (m,), ncoords) — the selection mask doubles as
+        the rule's per-worker suspicion signal (DESIGN.md §7)."""
+        from repro.core.aggregators import _ncoords_of
         m = u.shape[0]
-        b = self.params.b
         if not 0 <= b <= (m + 1) // 2 - 1:
             raise ValueError(f"b={b} out of range [0, ceil(m/2)-1] for m={m}")
         uf = u.astype(jnp.float32) if u.dtype != jnp.float32 else u
         if b == 0:
-            return jnp.mean(uf, axis=0)
+            return (jnp.mean(uf, axis=0), jnp.zeros((m,), jnp.float32),
+                    _ncoords_of(u))
         center = jnp.median(uf, axis=0)
         dist = jnp.abs(uf - center[None])
         order = jnp.argsort(dist, axis=0)             # ascending distance
         ranks = jnp.argsort(order, axis=0)            # per-coordinate rank
-        keep = (ranks < (m - b)).astype(uf.dtype)
-        return jnp.sum(uf * keep, axis=0) / (m - b)
+        dropped = ranks >= (m - b)
+        counts = jnp.sum(dropped, axis=tuple(range(1, uf.ndim))
+                         ).astype(jnp.float32)
+        agg = jnp.sum(uf * (~dropped).astype(uf.dtype), axis=0) / (m - b)
+        return agg, counts, _ncoords_of(u)
+
+    def _reduce_xla(self, u: jax.Array) -> jax.Array:
+        return self._stats(u, self.params.b)[0]
+
+    def reduce_sharded_with_scores(self, mat, psum_axes):
+        from repro.core.aggregators import trim_mask_scores
+        return trim_mask_scores(self._stats, mat, self.params.b,
+                                float(self.params.b) / mat.shape[0],
+                                psum_axes)

@@ -1,0 +1,24 @@
+"""``repro.defense`` — online Byzantine detection, worker reputation, and
+adaptive aggregation (DESIGN.md §7).
+
+The aggregation rules' internal statistics (trim masks, Krum distances,
+Weiszfeld weights) are a per-worker suspicion signal the reproduction used
+to discard every step.  This subsystem turns them into a closed loop:
+
+  ``scores``     — the per-worker suspicion contract + normalizers behind
+                   every rule's ``reduce_with_scores`` hook;
+  ``reputation`` — EMA trust state with hysteresis ejection/readmission,
+                   threaded through the jitted train steps and checkpoints;
+  ``detector``   — online q̂ estimation from score bimodality + an
+                   empirical Δ-resilience monitor reusing ``core/bounds``;
+  ``telemetry``  — structured per-step JSONL metrics shared by the sync,
+                   async, streaming, and serving paths.
+"""
+from repro.defense.detector import estimate_q, resilience_monitor  # noqa: F401
+from repro.defense.reputation import (  # noqa: F401
+    DefenseConfig, init_reputation, suspicion_of, update_reputation,
+)
+from repro.defense.scores import (  # noqa: F401
+    distance_ratio_scores, drop_frequency_scores,
+)
+from repro.defense.telemetry import TelemetryWriter, read_jsonl  # noqa: F401

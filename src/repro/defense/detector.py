@@ -1,0 +1,100 @@
+"""Online Byzantine-count estimation and empirical Δ-resilience monitoring.
+
+The paper's rules consume an a-priori bound on the Byzantine count (the b/q
+parameters); its companion (Xie et al. 2018) frames the gap between the
+assumed and the true count.  The detector closes that gap online:
+
+  * :func:`estimate_q` reads q̂ off the *bimodality* of the per-worker
+    suspicion scores: Byzantine workers cluster near 1, benign workers near
+    their baseline, so the largest gap in the sorted score sequence splits
+    the two modes.  A clean run has no decisive gap and q̂ = 0.
+
+  * :func:`resilience_monitor` re-uses the paper's own theory
+    (``core/bounds.py``) as a runtime invariant: estimate the benign
+    variance V̂ from the low-suspicion rows, evaluate the rule's Δ bound at
+    (m, q̂, b), and compare the aggregate's empirical squared deviation
+    from the benign center against it.  A violated bound means the current
+    attack has escaped the rule's resilience class (e.g. the
+    inner-product-manipulation adversary of "Fall of Empires") — exactly
+    the signal an adaptive aggregation policy needs.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def estimate_q(scores: jax.Array, *, min_gap: float = 0.2) -> jax.Array:
+    """Estimate the Byzantine count from score bimodality (jit-friendly).
+
+    Sort suspicion descending; the largest inter-score gap in the top half
+    splits the suspicious mode from the benign one, and q̂ = #workers above
+    it.  Gaps below ``min_gap`` (no decisive bimodality) yield q̂ = 0.
+    Only splits with q̂ <= m/2 are considered — more than m/2 Byzantine
+    workers is outside every rule's resilience class, so a "majority
+    suspicious" score vector reads as an uninformative signal, not a count.
+    """
+    m = scores.shape[0]
+    s = -jnp.sort(-scores)                      # descending
+    gaps = s[:-1] - s[1:]                       # gap after position i
+    valid = jnp.arange(m - 1) < (m // 2)        # q_hat = i+1 <= m//2
+    gaps = jnp.where(valid, gaps, -jnp.inf)
+    i = jnp.argmax(gaps)
+    return jnp.where(gaps[i] >= min_gap, i + 1, 0).astype(jnp.int32)
+
+
+def _delta_bound(rule_name: str, m: int, q: int, b: int,
+                 V: float) -> Optional[float]:
+    """The paper's Δ bound for a rule at (m, q, b), or None when the theory
+    has no bound for it (host-side helper; reuses ``core/bounds.py``)."""
+    from repro.core import bounds
+    try:
+        if rule_name == "trmean":
+            return bounds.delta_trmean(m, q, b, V)
+        if rule_name in ("phocas", "mediam"):
+            # mediam shares Phocas's dimensional class (looser constant);
+            # the Phocas bound is the documented reference envelope.
+            return bounds.delta_phocas(m, q, b, V)
+        if rule_name in ("krum", "multikrum"):
+            return bounds.delta_krum(m, q, V)
+    except ValueError:
+        return None      # assumption violated (2q >= m, b < q, ...)
+    return None
+
+
+def resilience_monitor(mat: jax.Array, agg: jax.Array, scores: jax.Array,
+                       *, rule_name: str, b: int,
+                       min_gap: float = 0.2) -> dict:
+    """Empirical Δ-resilience check for one aggregation step (host-side).
+
+    Args:
+      mat: the (m, d) worker matrix the rule saw (post-attack).
+      agg: the (d,) aggregate the rule produced.
+      scores: (m,) suspicion under the ``defense.scores`` contract.
+
+    Returns a dict with ``q_hat``, the benign-population variance estimate
+    ``v_hat``, the empirical squared deviation of the aggregate from the
+    benign center, the theoretical ``delta_bound`` at (m, q̂, b) (None when
+    no bound applies), and ``within_bound``.
+    """
+    m = mat.shape[0]
+    q_hat = int(estimate_q(scores, min_gap=min_gap))
+    # Presumed-benign population: everything below the detector's split.
+    order = jnp.argsort(-scores)
+    benign_idx = order[q_hat:]
+    benign = mat[benign_idx]
+    center = jnp.mean(benign, axis=0)
+    # V̂: total (over dimensions) per-worker variance around the benign mean
+    # — the V of Definition 5 / Theorems 1-2.
+    v_hat = float(jnp.mean(jnp.sum((benign - center[None]) ** 2, axis=1)))
+    sq_dev = float(jnp.sum((agg - center) ** 2))
+    bound = _delta_bound(rule_name, m, q_hat, b, v_hat)
+    return {
+        "q_hat": q_hat,
+        "v_hat": v_hat,
+        "sq_dev": sq_dev,
+        "delta_bound": bound,
+        "within_bound": (sq_dev <= bound) if bound is not None else None,
+    }

@@ -1,0 +1,79 @@
+"""EMA worker reputation: turn per-step suspicion into a persistent trust
+state with hysteresis ejection/readmission.
+
+Per-step scores are noisy (one bad minibatch can make an honest worker look
+briefly suspicious); an adaptive adversary can also behave for a while to
+build trust ("Fall of Empires"-style).  The reputation state is the EMA
+
+    rep_t = decay * rep_{t-1} + (1 - decay) * (1 - score_t)
+
+with ``rep = 1`` fully trusted.  Ejection/readmission is a hysteresis gate:
+a worker is ejected when its reputation falls below ``eject_below`` and
+readmitted only after recovering above ``readmit_above`` (> eject_below),
+so a worker oscillating near the threshold does not flap in and out of the
+aggregation every step.  Ejected workers keep being scored (the rule sees
+the full m-row matrix), so transiently-faulty workers earn their way back.
+
+The state is a plain dict-of-arrays pytree — it threads through jitted
+train steps (vmap and sharded layouts), checkpoints via
+``repro.checkpoint.io`` unchanged, and is replicated across the mesh (it is
+O(m), tiny).  The aggregation-side gate (replacing ejected rows before the
+rule runs) lives in ``core/robust.py``; this module owns the state
+dynamics.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class DefenseConfig:
+    """Serializable spec of the online defense (CLI: --defense ...)."""
+    reputation_decay: float = 0.9     # EMA decay toward the previous state
+    eject_below: float = 0.5          # eject when reputation falls below
+    readmit_above: float = 0.7        # readmit only after recovering above
+    warmup_steps: int = 2             # no ejection before this many updates
+    detector_min_gap: float = 0.2     # q-hat bimodality gap threshold
+    telemetry_path: Optional[str] = None  # JSONL sink (None = off)
+
+    def __post_init__(self):
+        if not 0.0 < self.reputation_decay < 1.0:
+            raise ValueError(f"reputation_decay must be in (0, 1), got "
+                             f"{self.reputation_decay}")
+        if self.readmit_above < self.eject_below:
+            raise ValueError("readmit_above must be >= eject_below "
+                             "(hysteresis band)")
+
+
+def init_reputation(m: int) -> dict:
+    """Fresh reputation state for m workers (all trusted, all active)."""
+    return {
+        "reputation": jnp.ones((m,), jnp.float32),
+        "active": jnp.ones((m,), jnp.float32),   # 1 = in the aggregation
+        "steps": jnp.zeros((), jnp.int32),
+    }
+
+
+def update_reputation(state: dict, scores: jax.Array,
+                      cfg: DefenseConfig) -> dict:
+    """One EMA + hysteresis update from per-step suspicion ``scores``
+    (shape (m,), in [0, 1] — the ``repro.defense.scores`` contract).
+    Pure and jit-friendly; called inside the train step."""
+    d = cfg.reputation_decay
+    rep = d * state["reputation"] + (1.0 - d) * (1.0 - scores)
+    steps = state["steps"] + 1
+    can_eject = (steps > cfg.warmup_steps).astype(jnp.float32)
+    active = state["active"]
+    ejected = (rep < cfg.eject_below).astype(jnp.float32) * can_eject
+    readmitted = (rep >= cfg.readmit_above).astype(jnp.float32)
+    active = jnp.clip(active * (1.0 - ejected) + readmitted, 0.0, 1.0)
+    return {"reputation": rep, "active": active, "steps": steps}
+
+
+def suspicion_of(state: dict) -> jax.Array:
+    """The smoothed suspicion view of the state (1 - reputation)."""
+    return 1.0 - state["reputation"]

@@ -1,0 +1,28 @@
+"""Per-worker suspicion scores — the defense subsystem's common currency.
+
+Every registered rule already computes a per-worker signal internally and
+(before this subsystem) threw it away every step: which values the trim
+step of trmean/phocas dropped, the Krum pairwise-distance sums, the
+Weiszfeld inverse-distance weights.  The ``reduce_with_scores`` /
+``reduce_sharded_with_scores`` hooks on ``registry.AggregatorRule``
+surface that signal under the **score contract**:
+
+  * scores have shape ``(m,)``, live in ``[0, 1]``;
+  * ``0`` = conforming (indistinguishable from the benign population),
+    ``1`` = maximally suspicious;
+  * in the sharded layouts the raw statistics are psum'd over the
+    dimension-sharded worker axes + model axes BEFORE normalization, so
+    every device holds identical global scores (same contract as the Krum
+    partial-distance psums, DESIGN.md §6/§7).
+
+The normalizers implementing the contract live in ``repro.core.registry``
+(rules are in the core layer and must not import upward into
+``repro.defense``); this module re-exports them as the defense-facing
+names so consumers of scores never touch the registry internals.  Callers
+obtain scores through ``aggregate_matrix(..., with_scores=True)`` /
+``robust_aggregate_dist(..., with_scores=True)`` or directly via the rule
+hooks.
+"""
+from repro.core.registry import (  # noqa: F401
+    distance_ratio_scores, drop_frequency_scores,
+)

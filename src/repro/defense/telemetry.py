@@ -1,0 +1,88 @@
+"""Structured per-step JSONL telemetry for the defense subsystem.
+
+One record per line, machine-readable, append-only — the format every
+consumer path (sync trainer, async SGD, streaming scan, serving) shares:
+
+    {"t": <unix time>, "kind": "train", "step": 12, "loss": 0.41,
+     "suspicion": [...], "reputation": [...], "active": [...], "q_hat": 2}
+
+``TelemetryWriter`` is deliberately boring: stdlib-only, no-op when no path
+is configured (so hot loops can call ``log`` unconditionally), converts jax
+/ numpy values to plain JSON types, and flushes per record so a crashed or
+killed run keeps everything written so far.  ``read_jsonl`` is the matching
+loader used by tests and offline analysis.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import IO, Optional
+
+import numpy as np
+
+
+def jsonify(value):
+    """Best-effort conversion of jax/numpy/py values to JSON-safe types
+    (non-finite floats become repr strings so the output stays strict
+    JSON).  Shared by the telemetry writer and the ``BENCH_<name>.json``
+    benchmark artifacts."""
+    if value is None or isinstance(value, (bool, int, str)):
+        return value
+    if isinstance(value, float):
+        return value if np.isfinite(value) else repr(value)
+    if isinstance(value, dict):
+        return {str(k): jsonify(v) for k, v in value.items()}
+    if isinstance(value, (list, tuple)):
+        return [jsonify(v) for v in value]
+    arr = np.asarray(value)
+    if arr.ndim == 0:
+        return jsonify(arr.item())
+    return [jsonify(v) for v in arr.tolist()]
+
+
+class TelemetryWriter:
+    """Append-only JSONL sink; ``path=None`` makes every call a no-op."""
+
+    def __init__(self, path: Optional[str]):
+        self.path = path
+        self._f: Optional[IO[str]] = None
+        if path:
+            os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+            self._f = open(path, "a")
+
+    @property
+    def enabled(self) -> bool:
+        return self._f is not None
+
+    def log(self, kind: str, step: int, **metrics) -> None:
+        """Write one record; jax arrays in ``metrics`` become lists."""
+        if self._f is None:
+            return
+        rec = {"t": time.time(), "kind": kind, "step": int(step)}
+        for k, v in metrics.items():
+            rec[k] = jsonify(v)
+        self._f.write(json.dumps(rec) + "\n")
+        self._f.flush()
+
+    def close(self) -> None:
+        if self._f is not None:
+            self._f.close()
+            self._f = None
+
+    def __enter__(self) -> "TelemetryWriter":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+
+def read_jsonl(path: str) -> list:
+    """Load every record of a telemetry file (tests / offline analysis)."""
+    records = []
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if line:
+                records.append(json.loads(line))
+    return records

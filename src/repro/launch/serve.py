@@ -27,6 +27,9 @@ def main():
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--mesh", default="",
                     help="data×model, e.g. 4x2; empty = single device")
+    ap.add_argument("--telemetry", default="",
+                    help="JSONL path for serve telemetry (shared "
+                         "repro.defense.telemetry format)")
     args = ap.parse_args()
 
     mesh = None
@@ -47,6 +50,13 @@ def main():
     tok_s = args.batch * args.new_tokens / dt
     print(f"[serve] {args.arch}: generated {out.shape} in {dt:.2f}s "
           f"({tok_s:.1f} tok/s)")
+    if args.telemetry:
+        from repro.defense.telemetry import TelemetryWriter
+        with TelemetryWriter(args.telemetry) as tel:
+            tel.log("serve", 0, arch=args.arch, batch=args.batch,
+                    prompt_len=args.prompt_len,
+                    new_tokens=args.new_tokens, wall_s=dt, tok_s=tok_s,
+                    mesh=args.mesh or "none")
     print(out[:, args.prompt_len:])
 
 

@@ -50,7 +50,21 @@ def main():
     ap.add_argument("--use-kernels", action="store_true",
                     help="deprecated alias for --backend pallas")
     ap.add_argument("--checkpoint", default="")
+    ap.add_argument("--defense", action="store_true",
+                    help="enable the repro.defense loop: per-worker "
+                         "suspicion scores, EMA reputation with "
+                         "ejection/readmission, online q-hat estimation")
+    ap.add_argument("--reputation-decay", type=float, default=0.9,
+                    help="EMA decay of the worker reputation state")
+    ap.add_argument("--telemetry", default="",
+                    help="JSONL path for per-step defense telemetry")
     args = ap.parse_args()
+    if args.defense and args.rule not in registry.score_rules():
+        # the default score hook is uniform zeros — the defense loop would
+        # silently never detect or eject anything
+        ap.error(f"--defense requires a score-emitting rule "
+                 f"(emits_scores=True); {args.rule!r} is not one of "
+                 f"{registry.score_rules()}")
     if args.use_kernels:
         print("[train] --use-kernels is deprecated; use --backend pallas")
         args.backend = "pallas"
@@ -76,13 +90,24 @@ def main():
                          log_every=max(args.steps // 20, 1),
                          checkpoint_path=args.checkpoint or None,
                          checkpoint_every=100 if args.checkpoint else 0)
+    defense = None
+    if args.defense:
+        from repro.defense import DefenseConfig
+        defense = DefenseConfig(reputation_decay=args.reputation_decay,
+                                telemetry_path=args.telemetry or None)
     ds = TokenStream(vocab_size=cfg.vocab_size, seq_len=args.seq_len,
                      global_batch=args.global_batch)
-    trainer = Trainer(model, ds.batch, tcfg, robust, opt, mesh=mesh)
+    trainer = Trainer(model, ds.batch, tcfg, robust, opt, mesh=mesh,
+                      defense_cfg=defense)
     print(f"[train] {args.arch}: {sum(x.size for x in jax.tree.leaves(trainer.params)):,} params, "
           f"rule={args.rule} b={args.b} attack={args.attack} "
-          f"mesh={args.mesh or 'none'}")
+          f"mesh={args.mesh or 'none'} defense={'on' if defense else 'off'}")
     trainer.run()
+    if defense is not None and trainer.history and \
+            "q_hat" in trainer.history[-1]:
+        last = trainer.history[-1]
+        print(f"[train] defense: q_hat={last['q_hat']} "
+              f"active={last['n_active']}/{args.workers}")
     print("[train] done")
 
 

@@ -1,2 +1,5 @@
 from repro.train.step import make_train_step  # noqa: F401
+from repro.train.streaming import (  # noqa: F401
+    make_streaming_train_step, run_streaming_training,
+)
 from repro.train.trainer import Trainer, TrainerConfig  # noqa: F401

@@ -38,19 +38,29 @@ class AsyncConfig:
 
 
 def make_async_train_step(model, *, robust_cfg: RobustConfig,
-                          opt_cfg: OptConfig, acfg: AsyncConfig):
+                          opt_cfg: OptConfig, acfg: AsyncConfig,
+                          defense_cfg=None):
     """Returns (init_state, step) for the buffered-async simulation.
 
     State carries the server params/opt plus each worker's stale parameter
     copy and the m-slot gradient buffer.  ``step(state, batch, key)`` runs
     one server iteration: every worker contributes the gradient of ITS stale
     copy on ITS batch shard; workers refresh their copy w.p. 1/tau.
+
+    With ``defense_cfg`` the state additionally carries the
+    ``repro.defense`` reputation dict: the buffer aggregation is
+    reputation-gated and every step updates the EMA from the rule's
+    suspicion scores.  Staleness makes honest workers *mildly* suspicious
+    (their gradients drift from the fresh majority), which is exactly what
+    the EMA + hysteresis smoothing is for — a stale-but-honest worker's
+    reputation hovers well above the ejection threshold while a Byzantine
+    slot's collapses.
     """
     m = acfg.num_workers
 
     def init_state(key):
         params = model.init(key)
-        return {
+        state = {
             "params": params,
             "opt": init_opt_state(opt_cfg, params),
             # every worker starts synchronized
@@ -59,6 +69,10 @@ def make_async_train_step(model, *, robust_cfg: RobustConfig,
             "buffer": jax.tree.map(
                 lambda x: jnp.zeros((m,) + x.shape, jnp.float32), params),
         }
+        if defense_cfg is not None:
+            from repro.defense.reputation import init_reputation
+            state["defense"] = init_reputation(m)
+        return state
 
     def worker_grad(wparams, sub_batch):
         return jax.grad(model.loss)(wparams, sub_batch)
@@ -70,7 +84,25 @@ def make_async_train_step(model, *, robust_cfg: RobustConfig,
         grads = jax.tree.map(lambda x: x.astype(jnp.float32), grads)
         buffer = grads                              # every slot refreshed
 
-        agg = aggregate_stacked_tree(buffer, robust_cfg, key=k_attack)
+        defense = None
+        extra_metrics = {}
+        if defense_cfg is not None:
+            from repro.defense.detector import estimate_q
+            from repro.defense.reputation import update_reputation
+            agg, scores = aggregate_stacked_tree(
+                buffer, robust_cfg, key=k_attack,
+                active=state["defense"]["active"], with_scores=True)
+            defense = update_reputation(state["defense"], scores,
+                                        defense_cfg)
+            extra_metrics = {
+                "suspicion": scores,
+                "reputation": defense["reputation"],
+                "active": defense["active"],
+                "q_hat": estimate_q(
+                    scores, min_gap=defense_cfg.detector_min_gap),
+            }
+        else:
+            agg = aggregate_stacked_tree(buffer, robust_cfg, key=k_attack)
         # Bounded-update rule: stale gradients make unbounded steps unstable,
         # so the server clips the aggregated update's global norm (standard
         # stale-synchronous stabilization).  This is a trust region, NOT a
@@ -97,7 +129,11 @@ def make_async_train_step(model, *, robust_cfg: RobustConfig,
 
         new_state = {"params": params, "opt": opt,
                      "worker_params": worker_params, "buffer": buffer}
-        metrics = {"staleness_frac": 1.0 - jnp.mean(refresh.astype(jnp.float32))}
+        if defense is not None:
+            new_state["defense"] = defense
+        metrics = {"staleness_frac":
+                   1.0 - jnp.mean(refresh.astype(jnp.float32)),
+                   **extra_metrics}
         return new_state, metrics
 
     return init_state, jax.jit(step)
@@ -106,17 +142,35 @@ def make_async_train_step(model, *, robust_cfg: RobustConfig,
 def run_async_training(model, batch_fn: Callable[[int], dict],
                        robust_cfg: RobustConfig, opt_cfg: OptConfig,
                        acfg: AsyncConfig, steps: int,
-                       eval_fn: Optional[Callable] = None) -> list:
-    """Driver: returns history of (step, eval) records."""
+                       eval_fn: Optional[Callable] = None,
+                       defense_cfg=None) -> list:
+    """Driver: returns history of (step, eval) records.  With
+    ``defense_cfg`` the records carry q̂/active counts and every step
+    streams to the configured JSONL telemetry sink."""
     from repro.data.pipeline import make_worker_batches
+    from repro.defense.telemetry import TelemetryWriter
     init_state, step = make_async_train_step(
-        model, robust_cfg=robust_cfg, opt_cfg=opt_cfg, acfg=acfg)
+        model, robust_cfg=robust_cfg, opt_cfg=opt_cfg, acfg=acfg,
+        defense_cfg=defense_cfg)
     key = jax.random.PRNGKey(acfg.seed)
     state = init_state(key)
     hist = []
-    for i in range(steps):
-        batch = make_worker_batches(batch_fn(i), acfg.num_workers)
-        state, metrics = step(state, batch, jax.random.fold_in(key, i))
-        if eval_fn is not None and (i % 10 == 0 or i == steps - 1):
-            hist.append({"step": i, "eval": float(eval_fn(state["params"]))})
+    telemetry_path = (defense_cfg.telemetry_path
+                      if defense_cfg is not None else None)
+    with TelemetryWriter(telemetry_path) as tel:
+        for i in range(steps):
+            batch = make_worker_batches(batch_fn(i), acfg.num_workers)
+            state, metrics = step(state, batch, jax.random.fold_in(key, i))
+            if defense_cfg is not None:
+                tel.log("async", i,
+                        staleness_frac=metrics["staleness_frac"],
+                        suspicion=metrics["suspicion"],
+                        reputation=metrics["reputation"],
+                        active=metrics["active"],
+                        q_hat=metrics["q_hat"])
+            if eval_fn is not None and (i % 10 == 0 or i == steps - 1):
+                rec = {"step": i, "eval": float(eval_fn(state["params"]))}
+                if defense_cfg is not None:
+                    rec["q_hat"] = int(metrics["q_hat"])
+                hist.append(rec)
     return hist

@@ -35,7 +35,7 @@ from repro.optim.optimizers import OptConfig, apply_updates
 
 def make_train_step(model, *, robust_cfg: RobustConfig, opt_cfg: OptConfig,
                     num_workers: int, mesh: Optional[Mesh] = None,
-                    donate: bool = True):
+                    donate: bool = True, defense_cfg=None):
     """Build the jitted train step.
 
     Args:
@@ -43,9 +43,16 @@ def make_train_step(model, *, robust_cfg: RobustConfig, opt_cfg: OptConfig,
       num_workers: m — worker groups per step.  In distributed mode must
         equal the product of the mesh worker-axis sizes.
       mesh: if None, aggregation runs locally (tests / laptop scale).
+      defense_cfg: a ``repro.defense.DefenseConfig`` to enable the online
+        defense loop (suspicion scores -> reputation EMA -> gated
+        aggregation -> q̂); None keeps the plain paper-faithful step.
 
-    Returns ``step(params, opt_state, batch, key) -> (params, opt_state,
-    metrics)`` where batch leaves are worker-stacked (m, B/m, ...).
+    Without defense, returns ``step(params, opt_state, batch, key) ->
+    (params, opt_state, metrics)`` where batch leaves are worker-stacked
+    (m, B/m, ...).  With defense, the step additionally threads the
+    reputation state: ``step(params, opt_state, batch, key, defense) ->
+    (params, opt_state, defense, metrics)`` and the metrics gain
+    ``suspicion`` / ``reputation`` / ``active`` / ``q_hat``.
     """
     m = num_workers
     if mesh is not None:
@@ -60,37 +67,77 @@ def make_train_step(model, *, robust_cfg: RobustConfig, opt_cfg: OptConfig,
     def worker_loss(params, sub_batch):
         return model.loss(params, sub_batch)
 
-    def step(params, opt_state, batch, key):
+    def worker_grads(params, batch):
         from repro.models import moe
         with moe.no_data_grouping():   # worker tokens are already shard-local
-            losses, grads = jax.vmap(jax.value_and_grad(worker_loss),
-                                     in_axes=(None, 0))(params, batch)
-        # grads: worker-stacked (m, ...) pytree
-        if mesh is None:
-            agg = aggregate_stacked_tree(grads, robust_cfg, key)
-        else:
-            pspecs = tree_pspecs(params, mesh)
-            stacked_specs = jax.tree.map(
-                lambda sp: P(wa, *sp), pspecs,
-                is_leaf=lambda x: isinstance(x, P))
+            return jax.vmap(jax.value_and_grad(worker_loss),
+                            in_axes=(None, 0))(params, batch)
 
+    def aggregate(params, grads, key, active, with_scores):
+        """Robust aggregation in either layout; scores come back replicated."""
+        if mesh is None:
+            return aggregate_stacked_tree(grads, robust_cfg, key,
+                                          active=active,
+                                          with_scores=with_scores)
+        pspecs = tree_pspecs(params, mesh)
+        stacked_specs = jax.tree.map(
+            lambda sp: P(wa, *sp), pspecs,
+            is_leaf=lambda x: isinstance(x, P))
+
+        out_specs = (pspecs, P()) if with_scores else pspecs
+        if active is None:
             def agg_fn(g, k):
                 local = jax.tree.map(lambda x: x[0], g)
                 return robust_aggregate_dist(local, robust_cfg,
                                              worker_axes=wa, model_axes=ma,
-                                             key=k)
+                                             key=k, with_scores=with_scores)
 
-            agg = jax.shard_map(agg_fn, mesh=mesh,
-                                in_specs=(stacked_specs, P()),
-                                out_specs=pspecs,
-                                check_vma=False)(grads, key)
+            return jax.shard_map(agg_fn, mesh=mesh,
+                                 in_specs=(stacked_specs, P()),
+                                 out_specs=out_specs,
+                                 check_vma=False)(grads, key)
+
+        def agg_gated(g, k, act):
+            local = jax.tree.map(lambda x: x[0], g)
+            return robust_aggregate_dist(local, robust_cfg,
+                                         worker_axes=wa, model_axes=ma,
+                                         key=k, active=act,
+                                         with_scores=with_scores)
+
+        return jax.shard_map(agg_gated, mesh=mesh,
+                             in_specs=(stacked_specs, P(), P()),
+                             out_specs=out_specs,
+                             check_vma=False)(grads, key, active)
+
+    def step(params, opt_state, batch, key):
+        losses, grads = worker_grads(params, batch)
+        agg = aggregate(params, grads, key, None, False)
         params, opt_state = apply_updates(opt_cfg, params, agg, opt_state)
         metrics = {"loss": jnp.mean(losses),
                    "loss_per_worker": losses,
                    "grad_norm": _tree_norm(agg)}
         return params, opt_state, metrics
 
+    def defense_step(params, opt_state, batch, key, defense):
+        from repro.defense.detector import estimate_q
+        from repro.defense.reputation import update_reputation
+        losses, grads = worker_grads(params, batch)
+        agg, scores = aggregate(params, grads, key, defense["active"], True)
+        defense = update_reputation(defense, scores, defense_cfg)
+        params, opt_state = apply_updates(opt_cfg, params, agg, opt_state)
+        metrics = {"loss": jnp.mean(losses),
+                   "loss_per_worker": losses,
+                   "grad_norm": _tree_norm(agg),
+                   "suspicion": scores,
+                   "reputation": defense["reputation"],
+                   "active": defense["active"],
+                   "q_hat": estimate_q(
+                       scores, min_gap=defense_cfg.detector_min_gap)}
+        return params, opt_state, defense, metrics
+
     donate_argnums = (0, 1) if donate else ()
+    if defense_cfg is not None:
+        return jax.jit(defense_step, donate_argnums=donate_argnums)
     return jax.jit(step, donate_argnums=donate_argnums)
 
 

@@ -26,7 +26,8 @@ correct gradients at once and is vmap-mode-only.
 """
 from __future__ import annotations
 
-from typing import Optional
+import zlib
+from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
@@ -38,6 +39,17 @@ from repro.core.robust import RobustConfig
 from repro.optim.optimizers import OptConfig, apply_updates
 
 
+def _path_salt(path) -> int:
+    """Deterministic 31-bit fold-in salt from a leaf's tree path.
+
+    Derived from the *path*, not the shape: ``hash(str(shape))`` is salted
+    per-process (PYTHONHASHSEED), so two processes of one logical run would
+    draw different attack noise, and same-shape leaves would collide on
+    identical noise.  CRC32 of the key-path string is stable across
+    processes and unique per leaf."""
+    return zlib.crc32(jax.tree_util.keystr(path).encode("utf-8")) & 0x7FFFFFFF
+
+
 def _worker_attack(cfg: AttackConfig, g, widx, key, center=None):
     """Apply a per-worker-computable attack to worker ``widx``'s gradient
     pytree (the streaming analogue of core.attacks on the (m,d) matrix)."""
@@ -47,11 +59,12 @@ def _worker_attack(cfg: AttackConfig, g, widx, key, center=None):
     q = cfg.num_byzantine
 
     if name == "gaussian":
-        def leaf(path_key, x):
+        def leaf(path, x):
             noise = cfg.gaussian_std * jax.random.normal(
-                jax.random.fold_in(key, path_key), x.shape, jnp.float32)
+                jax.random.fold_in(key, _path_salt(path)), x.shape,
+                jnp.float32)
             return jnp.where(widx < q, noise.astype(x.dtype), x)
-        return jax.tree.map(lambda x: leaf(hash(str(x.shape)) % 2**30, x), g)
+        return jax.tree_util.tree_map_with_path(leaf, g)
     if name == "signflip":
         return jax.tree.map(
             lambda x: jnp.where(widx < q, -10.0 * x, x), g)
@@ -78,7 +91,8 @@ def _worker_attack(cfg: AttackConfig, g, widx, key, center=None):
         return jax.tree_util.tree_unflatten(
             treedef, [leaf(i, x) for i, x in enumerate(leaves)])
     raise ValueError(f"attack {cfg.name!r} not supported in streaming mode "
-                     "(omniscient needs all worker gradients at once)")
+                     "(omniscient/innerprod need all worker gradients at "
+                     "once)")
 
 
 def _merge_bottom(bot, g):
@@ -166,22 +180,64 @@ def make_streaming_train_step(model, *, robust_cfg: RobustConfig,
                     g = worker_grad(params, sub, widx, key)  # recompute
                     d = jax.tree.map(
                         lambda x, c: jnp.abs(x - c), g, center)
+                    # O(1)-memory per-worker suspicion: total L1 distance
+                    # mass from the robust center (the streaming analogue
+                    # of the batch rules' selection-mask scores — exact
+                    # masks would need a third scan).
+                    mass = sum(jnp.sum(x) for x in jax.tree.leaves(d))
                     merged = jax.tree.map(_merge_top_by_dist, dtop, vtop,
                                           d, g)
                     dtop = jax.tree.map(lambda t: t[0], merged,
                                         is_leaf=lambda x: isinstance(x, tuple))
                     vtop = jax.tree.map(lambda t: t[1], merged,
                                         is_leaf=lambda x: isinstance(x, tuple))
-                    return (dtop, vtop), None
+                    return (dtop, vtop), mass
 
-                (dtop, vtop), _ = jax.lax.scan(pass2, (dz, vz),
-                                               (widxs, batch))
+                (dtop, vtop), masses = jax.lax.scan(pass2, (dz, vz),
+                                                    (widxs, batch))
+                from repro.defense.scores import distance_ratio_scores
+                suspicion = distance_ratio_scores(masses)
                 agg = jax.tree.map(
                     lambda s, v: (s - v.sum(0)) / (m - b), ssum, vtop)
 
         agg = jax.tree.map(lambda a, p: a.astype(p.dtype), agg, params)
         params2, opt_state2 = apply_updates(opt_cfg, params, agg, opt_state)
         metrics = {"loss": jnp.mean(losses), "loss_per_worker": losses}
+        if rule == "phocas" and b:
+            metrics["suspicion"] = suspicion
         return params2, opt_state2, metrics
 
     return jax.jit(step)
+
+
+def run_streaming_training(model, batch_fn: Callable[[int], dict],
+                           robust_cfg: RobustConfig, opt_cfg: OptConfig,
+                           *, num_workers: int, steps: int,
+                           seed: int = 0,
+                           eval_fn: Optional[Callable] = None,
+                           telemetry_path: Optional[str] = None) -> list:
+    """Driver for the streaming mode, with the same structured JSONL
+    telemetry the sync/async paths emit (kind="streaming"; phocas runs
+    include the per-worker suspicion from the second pass)."""
+    from repro.data.pipeline import make_worker_batches
+    from repro.defense.telemetry import TelemetryWriter
+    step = make_streaming_train_step(
+        model, robust_cfg=robust_cfg, opt_cfg=opt_cfg,
+        num_workers=num_workers)
+    key = jax.random.PRNGKey(seed)
+    params = model.init(key)
+    from repro.optim.optimizers import init_opt_state
+    opt_state = init_opt_state(opt_cfg, params)
+    hist = []
+    with TelemetryWriter(telemetry_path) as tel:
+        for i in range(steps):
+            batch = make_worker_batches(batch_fn(i), num_workers)
+            params, opt_state, metrics = step(params, opt_state, batch,
+                                              jax.random.fold_in(key, i))
+            extra = ({"suspicion": metrics["suspicion"]}
+                     if "suspicion" in metrics else {})
+            tel.log("streaming", i, loss=metrics["loss"], **extra)
+            if eval_fn is not None and (i % 10 == 0 or i == steps - 1):
+                hist.append({"step": i, "loss": float(metrics["loss"]),
+                             "eval": float(eval_fn(params))})
+    return hist

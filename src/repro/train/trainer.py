@@ -1,7 +1,13 @@
 """Training loop driver: data -> worker batches -> robust step -> metrics,
 with periodic checkpointing.  Used by the examples and the paper-repro
 benchmarks (laptop scale); the same step function scales to the production
-mesh via launch/train.py."""
+mesh via launch/train.py.
+
+With a ``repro.defense.DefenseConfig`` the loop closes the detection loop:
+per-step suspicion scores update the EMA reputation state (threaded through
+the jitted step and checkpointed alongside params/opt), ejected workers are
+gated out of the aggregation, and every step's defense metrics stream to
+the structured JSONL telemetry sink."""
 from __future__ import annotations
 
 import dataclasses
@@ -31,14 +37,17 @@ class Trainer:
     def __init__(self, model, batch_fn: Callable[[int], dict],
                  tcfg: TrainerConfig, robust_cfg: RobustConfig,
                  opt_cfg: OptConfig, mesh=None,
-                 eval_fn: Optional[Callable] = None):
+                 eval_fn: Optional[Callable] = None,
+                 defense_cfg=None):
         self.model = model
         self.batch_fn = batch_fn
         self.tcfg = tcfg
         self.eval_fn = eval_fn
+        self.defense_cfg = defense_cfg
         self.step_fn = make_train_step(
             model, robust_cfg=robust_cfg, opt_cfg=opt_cfg,
-            num_workers=tcfg.num_workers, mesh=mesh, donate=False)
+            num_workers=tcfg.num_workers, mesh=mesh, donate=False,
+            defense_cfg=defense_cfg)
         key = jax.random.PRNGKey(tcfg.seed)
         self.params = model.init(key)
         if mesh is not None:
@@ -47,34 +56,76 @@ class Trainer:
             self.params = shard_params(self.params, mesh)
         from repro.optim.optimizers import init_opt_state
         self.opt_state = init_opt_state(opt_cfg, self.params)
+        self.defense_state = None
+        if defense_cfg is not None:
+            from repro.defense.reputation import init_reputation
+            self.defense_state = init_reputation(tcfg.num_workers)
         self.history: list = []
 
+    def _checkpoint_tree(self) -> dict:
+        tree = {"params": self.params, "opt": self.opt_state}
+        if self.defense_state is not None:
+            tree["defense"] = self.defense_state
+        return tree
+
+    def restore(self, path: str) -> int:
+        """Restore params/opt (and reputation state, when defense is on)
+        from a checkpoint written by :meth:`run`; returns the saved step."""
+        from repro.checkpoint.io import load_checkpoint
+        tree, step = load_checkpoint(path, self._checkpoint_tree())
+        self.params, self.opt_state = tree["params"], tree["opt"]
+        if self.defense_state is not None:
+            self.defense_state = tree["defense"]
+        return step
+
     def run(self, verbose: bool = True) -> list:
+        from repro.defense.telemetry import TelemetryWriter
         key = jax.random.PRNGKey(self.tcfg.seed + 1)
+        telemetry_path = (self.defense_cfg.telemetry_path
+                          if self.defense_cfg is not None else None)
         t0 = time.time()
-        for step in range(self.tcfg.steps):
-            batch = make_worker_batches(self.batch_fn(step),
-                                        self.tcfg.num_workers)
-            key, sk = jax.random.split(key)
-            self.params, self.opt_state, metrics = self.step_fn(
-                self.params, self.opt_state, batch, sk)
-            if step % self.tcfg.log_every == 0 or step == self.tcfg.steps - 1:
-                rec = {"step": step, "loss": float(metrics["loss"]),
-                       "grad_norm": float(metrics["grad_norm"]),
-                       "wall": time.time() - t0}
-                if self.eval_fn is not None:
-                    rec["eval"] = float(self.eval_fn(self.params))
-                self.history.append(rec)
-                if verbose:
-                    msg = (f"step {step:5d}  loss {rec['loss']:.4f}  "
-                           f"gnorm {rec['grad_norm']:.3e}")
-                    if "eval" in rec:
-                        msg += f"  eval {rec['eval']:.4f}"
-                    print(msg, flush=True)
-            if (self.tcfg.checkpoint_path and self.tcfg.checkpoint_every
-                    and step and step % self.tcfg.checkpoint_every == 0):
-                from repro.checkpoint.io import save_checkpoint
-                save_checkpoint(self.tcfg.checkpoint_path,
-                                {"params": self.params,
-                                 "opt": self.opt_state}, step=step)
+        with TelemetryWriter(telemetry_path) as tel:
+            for step in range(self.tcfg.steps):
+                batch = make_worker_batches(self.batch_fn(step),
+                                            self.tcfg.num_workers)
+                key, sk = jax.random.split(key)
+                if self.defense_state is not None:
+                    (self.params, self.opt_state, self.defense_state,
+                     metrics) = self.step_fn(self.params, self.opt_state,
+                                             batch, sk, self.defense_state)
+                    tel.log("train", step,
+                            loss=metrics["loss"],
+                            grad_norm=metrics["grad_norm"],
+                            suspicion=metrics["suspicion"],
+                            reputation=metrics["reputation"],
+                            active=metrics["active"],
+                            q_hat=metrics["q_hat"])
+                else:
+                    self.params, self.opt_state, metrics = self.step_fn(
+                        self.params, self.opt_state, batch, sk)
+                if step % self.tcfg.log_every == 0 or \
+                        step == self.tcfg.steps - 1:
+                    rec = {"step": step, "loss": float(metrics["loss"]),
+                           "grad_norm": float(metrics["grad_norm"]),
+                           "wall": time.time() - t0}
+                    if "q_hat" in metrics:
+                        rec["q_hat"] = int(metrics["q_hat"])
+                        rec["n_active"] = int(jnp.sum(metrics["active"]))
+                    if self.eval_fn is not None:
+                        rec["eval"] = float(self.eval_fn(self.params))
+                    self.history.append(rec)
+                    if verbose:
+                        msg = (f"step {step:5d}  loss {rec['loss']:.4f}  "
+                               f"gnorm {rec['grad_norm']:.3e}")
+                        if "q_hat" in rec:
+                            msg += (f"  qhat {rec['q_hat']}  "
+                                    f"active {rec['n_active']}")
+                        if "eval" in rec:
+                            msg += f"  eval {rec['eval']:.4f}"
+                        print(msg, flush=True)
+                if (self.tcfg.checkpoint_path and self.tcfg.checkpoint_every
+                        and step and step % self.tcfg.checkpoint_every == 0):
+                    from repro.checkpoint.io import save_checkpoint
+                    save_checkpoint(self.tcfg.checkpoint_path,
+                                    self._checkpoint_tree(), step=step)
         return self.history

@@ -1,0 +1,443 @@
+"""repro.defense: suspicion scores (every emits_scores rule × attacks ×
+both collective layouts), reputation dynamics + checkpoint round-trip,
+online q̂ detection, telemetry, and the ISSUE acceptance case (m=40, q=8
+signflip: phocas ranks all Byzantine workers in the top q within 5 steps).
+"""
+import json
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (AttackConfig, RobustConfig, aggregate_matrix,
+                        gate_matrix, registry)
+from repro.defense import (DefenseConfig, TelemetryWriter, estimate_q,
+                           init_reputation, read_jsonl, resilience_monitor,
+                           suspicion_of, update_reputation)
+
+KEY = jax.random.PRNGKey(7)
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+M, D, Q = 20, 64, 4
+
+
+def _attacked_scores(rule, attack, q=Q, m=M, d=D, b=Q, seed=0):
+    key = jax.random.fold_in(KEY, seed)
+    u = 1.0 + 0.1 * jax.random.normal(key, (m, d))
+    cfg = RobustConfig(rule=rule, b=b, q=b,
+                       attack=AttackConfig(name=attack, num_byzantine=q))
+    _, scores = aggregate_matrix(u, cfg, key=key, with_scores=True)
+    return np.asarray(scores)
+
+
+# ---------------------------------------------------------------------------
+# Score contract + registry metadata
+# ---------------------------------------------------------------------------
+
+def test_emits_scores_metadata():
+    emitting = set(registry.score_rules())
+    for name in ("trmean", "phocas", "krum", "multikrum", "geomedian",
+                 "mediam"):
+        assert name in emitting, name
+    # mean's uniform default is intentionally NOT flagged as informative
+    assert "mean" not in emitting
+    assert not registry.get_rule("mean").emits_scores
+
+
+def test_uniform_default_for_non_emitting_rules():
+    u = jax.random.normal(KEY, (8, 16))
+    agg, scores = registry.make_rule("mean").reduce_with_scores(u)
+    np.testing.assert_allclose(np.asarray(scores), np.zeros(8))
+    np.testing.assert_allclose(np.asarray(agg),
+                               np.asarray(jnp.mean(u, axis=0)), atol=1e-6)
+
+
+@pytest.mark.parametrize("attack", ["signflip", "gaussian", "innerprod"])
+@pytest.mark.parametrize("rule", registry.score_rules())
+def test_suspicion_concentrates_on_byzantine(rule, attack):
+    """Every emits_scores rule puts the q Byzantine rows on top, for the
+    row-wise attacks including the adaptive inner-product manipulation."""
+    scores = _attacked_scores(rule, attack)
+    assert scores.shape == (M,)
+    assert np.all(scores >= 0) and np.all(scores <= 1)
+    top = set(np.argsort(-scores)[:Q].tolist())
+    assert top == set(range(Q)), (rule, attack, scores)
+    # decisive margin between the Byzantine and benign populations
+    assert scores[:Q].min() > scores[Q:].max() + 0.2, (rule, attack)
+
+
+@pytest.mark.parametrize("rule", registry.score_rules())
+def test_clean_run_scores_stay_low(rule):
+    scores = _attacked_scores(rule, "none", q=0)
+    assert scores.max() < 0.5, (rule, scores)
+    assert int(estimate_q(jnp.asarray(scores))) == 0
+
+
+def test_agg_matches_plain_reduce():
+    """reduce_with_scores must not change the aggregation result."""
+    u = 2.0 + jax.random.normal(KEY, (M, D))
+    for rule in registry.score_rules():
+        cfg = RobustConfig(rule=rule, b=2, q=2)
+        ref = np.asarray(aggregate_matrix(u, cfg))
+        got, _ = aggregate_matrix(u, cfg, with_scores=True)
+        np.testing.assert_allclose(np.asarray(got), ref, atol=1e-5,
+                                   err_msg=rule)
+
+
+# ---------------------------------------------------------------------------
+# ISSUE acceptance: m=40, q=8 signflip, phocas, 5 steps
+# ---------------------------------------------------------------------------
+
+def test_phocas_ranks_all_byzantine_within_5_steps_m40():
+    m, q, d = 40, 8, 256
+    cfg = RobustConfig(rule="phocas", b=q, q=q,
+                       attack=AttackConfig(name="signflip", num_byzantine=q))
+    dcfg = DefenseConfig()
+    state = init_reputation(m)
+    for t in range(5):
+        key = jax.random.fold_in(KEY, t)
+        u = 1.0 + 0.1 * jax.random.normal(key, (m, d))
+        _, scores = aggregate_matrix(u, cfg, key=key, with_scores=True)
+        state = update_reputation(state, scores, dcfg)
+    susp = np.asarray(suspicion_of(state))
+    top = set(np.argsort(-susp)[:q].tolist())
+    assert top == set(range(q)), susp
+
+
+# ---------------------------------------------------------------------------
+# Reputation dynamics
+# ---------------------------------------------------------------------------
+
+def test_reputation_eject_and_readmit_hysteresis():
+    m = 6
+    cfg = DefenseConfig(reputation_decay=0.5, eject_below=0.5,
+                        readmit_above=0.7, warmup_steps=1)
+    state = init_reputation(m)
+    bad = jnp.zeros((m,)).at[0].set(1.0)           # worker 0 suspicious
+    for _ in range(6):
+        state = update_reputation(state, bad, cfg)
+    assert float(state["active"][0]) == 0.0        # ejected
+    assert np.all(np.asarray(state["active"][1:]) == 1.0)
+    # transiently-faulty worker recovers: feed clean scores until readmission
+    clean = jnp.zeros((m,))
+    for _ in range(6):
+        state = update_reputation(state, clean, cfg)
+    assert float(state["active"][0]) == 1.0        # readmitted
+    # warmup: no ejection on the very first updates
+    s2 = update_reputation(init_reputation(m), bad,
+                           DefenseConfig(reputation_decay=0.01,
+                                         warmup_steps=3))
+    assert float(s2["active"][0]) == 1.0
+
+
+def test_reputation_gate_replaces_ejected_rows():
+    u = jax.random.normal(KEY, (8, 5))
+    active = jnp.ones((8,)).at[2].set(0.0)
+    gated = gate_matrix(u, active)
+    med = jnp.median(u, axis=0)
+    np.testing.assert_allclose(np.asarray(gated[2]), np.asarray(med))
+    np.testing.assert_allclose(np.asarray(gated[0]), np.asarray(u[0]))
+
+
+def test_reputation_state_checkpoint_roundtrip(tmp_path):
+    from repro.checkpoint.io import load_checkpoint, save_checkpoint
+    cfg = DefenseConfig()
+    state = init_reputation(12)
+    for t in range(4):
+        scores = jnp.clip(jax.random.uniform(jax.random.fold_in(KEY, t),
+                                             (12,)), 0, 1)
+        state = update_reputation(state, scores, cfg)
+    path = str(tmp_path / "ckpt")
+    save_checkpoint(path, {"defense": state}, step=4)
+    restored, step = load_checkpoint(path, {"defense": init_reputation(12)})
+    assert step == 4
+    for k in state:
+        np.testing.assert_array_equal(np.asarray(restored["defense"][k]),
+                                      np.asarray(state[k]), err_msg=k)
+
+
+def test_defense_config_validation():
+    with pytest.raises(ValueError, match="reputation_decay"):
+        DefenseConfig(reputation_decay=1.5)
+    with pytest.raises(ValueError, match="hysteresis"):
+        DefenseConfig(eject_below=0.8, readmit_above=0.5)
+
+
+# ---------------------------------------------------------------------------
+# Detector
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("q", [0, 2, 4, 8])
+def test_detector_qhat_within_one_synthetic(q):
+    """q̂ within ±1 of the true q across the synthetic suite (every
+    emits_scores rule under signflip/gaussian)."""
+    for rule in registry.score_rules():
+        for attack in ("signflip", "gaussian"):
+            if q == 0:
+                scores = _attacked_scores(rule, "none", q=0)
+            else:
+                scores = _attacked_scores(rule, attack, q=q, b=max(q, 2))
+            q_hat = int(estimate_q(jnp.asarray(scores)))
+            assert abs(q_hat - q) <= 1, (rule, attack, q, q_hat, scores)
+
+
+def test_detector_caps_at_half():
+    # a majority-suspicious vector is uninformative, not a count
+    scores = jnp.concatenate([jnp.ones((15,)), jnp.zeros((5,))])
+    assert int(estimate_q(scores)) <= 10
+
+
+def test_resilience_monitor_clean_within_bound():
+    u = 1.0 + 0.1 * jax.random.normal(KEY, (M, D))
+    cfg = RobustConfig(rule="phocas", b=4, q=4)
+    agg, scores = aggregate_matrix(u, cfg, with_scores=True)
+    rep = resilience_monitor(u, agg, scores, rule_name="phocas", b=4)
+    assert rep["q_hat"] == 0
+    assert rep["delta_bound"] is not None and rep["within_bound"]
+
+
+def test_resilience_monitor_flags_broken_rule():
+    """Mean under signflip: the aggregate leaves the benign envelope."""
+    key = jax.random.fold_in(KEY, 1)
+    u = 1.0 + 0.1 * jax.random.normal(key, (M, D))
+    cfg = RobustConfig(rule="mean", b=4, q=4,
+                       attack=AttackConfig(name="signflip", num_byzantine=4))
+    agg = aggregate_matrix(u, cfg, key=key)
+    # score with phocas (mean itself is score-blind), bound for phocas
+    cfg2 = RobustConfig(rule="phocas", b=4, q=4,
+                        attack=AttackConfig(name="signflip",
+                                            num_byzantine=4))
+    _, scores = aggregate_matrix(u, cfg2, key=key, with_scores=True)
+    rep = resilience_monitor(u, np.asarray(agg), scores,
+                             rule_name="phocas", b=4)
+    assert rep["q_hat"] == 4
+    assert rep["within_bound"] is False
+
+
+# ---------------------------------------------------------------------------
+# Train-step integration (local) + streaming keying fix + telemetry
+# ---------------------------------------------------------------------------
+
+def test_defense_train_step_ejects_byzantine_workers():
+    from repro.data import ClassificationData, make_worker_batches
+    from repro.models.mlp import build_mlp_model
+    from repro.optim import OptConfig, init_opt_state
+    from repro.train import make_train_step
+    m, q = 8, 2
+    data = ClassificationData(num_classes=10, dim=32, noise=0.8, seed=1)
+    model = build_mlp_model(dims=(32, 32, 10))
+    params = model.init(KEY)
+    opt_cfg = OptConfig(name="sgd", lr=0.1)
+    rob = RobustConfig(rule="phocas", b=q, q=q,
+                       attack=AttackConfig(name="signflip",
+                                           num_byzantine=q))
+    dcfg = DefenseConfig(reputation_decay=0.6, warmup_steps=1)
+    step = make_train_step(model, robust_cfg=rob, opt_cfg=opt_cfg,
+                           num_workers=m, mesh=None, donate=False,
+                           defense_cfg=dcfg)
+    opt_state = init_opt_state(opt_cfg, params)
+    defense = init_reputation(m)
+    for i in range(8):
+        batch = make_worker_batches(data.batch(i, 16 * m), m)
+        params, opt_state, defense, mt = step(
+            params, opt_state, batch, jax.random.fold_in(KEY, i), defense)
+    active = np.asarray(defense["active"])
+    assert np.all(active[:q] == 0.0), active       # Byzantine ejected
+    assert np.all(active[q:] == 1.0), active       # honest workers kept
+    assert int(mt["q_hat"]) == q
+    assert np.isfinite(float(mt["loss"]))
+
+
+def test_streaming_gaussian_keying_is_path_derived():
+    """Same-shape leaves must draw DIFFERENT noise (the old
+    hash(str(shape)) salt collided), and the salt must not depend on
+    process-specific state."""
+    from repro.train.streaming import _path_salt, _worker_attack
+    g = {"a": jnp.zeros((4, 3)), "b": jnp.zeros((4, 3))}
+    cfg = AttackConfig(name="gaussian", num_byzantine=1, gaussian_std=1.0)
+    out = _worker_attack(cfg, g, widx=jnp.int32(0), key=KEY)
+    assert not np.allclose(np.asarray(out["a"]), np.asarray(out["b"]))
+    # salt is a pure function of the tree path
+    paths = [p for p, _ in jax.tree_util.tree_flatten_with_path(g)[0]]
+    salts = [_path_salt(p) for p in paths]
+    assert len(set(salts)) == len(salts)
+    assert salts == [_path_salt(p) for p in paths]
+
+
+def test_telemetry_writer_roundtrip(tmp_path):
+    path = str(tmp_path / "tel.jsonl")
+    with TelemetryWriter(path) as tel:
+        tel.log("train", 0, loss=0.5, suspicion=jnp.array([0.0, 1.0]),
+                q_hat=jnp.int32(1), note="ok")
+        tel.log("serve", 3, tok_s=123.4)
+    recs = read_jsonl(path)
+    assert len(recs) == 2
+    assert recs[0]["kind"] == "train" and recs[0]["suspicion"] == [0.0, 1.0]
+    assert recs[0]["q_hat"] == 1 and recs[1]["step"] == 3
+    # disabled writer is a no-op
+    off = TelemetryWriter(None)
+    off.log("train", 0, loss=1.0)
+    off.close()
+
+
+def test_trainer_defense_telemetry_and_checkpoint(tmp_path):
+    from repro.data import ClassificationData
+    from repro.models.mlp import build_mlp_model
+    from repro.optim import OptConfig
+    from repro.train import Trainer, TrainerConfig
+    data = ClassificationData(num_classes=10, dim=16, noise=0.8, seed=0)
+    model = build_mlp_model(dims=(16, 16, 10))
+    tel = str(tmp_path / "tel.jsonl")
+    ckpt = str(tmp_path / "ck")
+    tcfg = TrainerConfig(num_workers=8, steps=5, log_every=2,
+                         checkpoint_path=ckpt, checkpoint_every=4)
+    rob = RobustConfig(rule="phocas", b=2, q=2,
+                       attack=AttackConfig(name="gaussian", num_byzantine=2))
+    trainer = Trainer(model, lambda i: data.batch(i, 16 * 8), tcfg, rob,
+                      OptConfig(name="sgd", lr=0.1),
+                      defense_cfg=DefenseConfig(telemetry_path=tel))
+    hist = trainer.run(verbose=False)
+    assert hist and "q_hat" in hist[-1]
+    recs = read_jsonl(tel)
+    assert len(recs) == 5 and all(r["kind"] == "train" for r in recs)
+    assert len(recs[0]["reputation"]) == 8
+    # reputation state round-trips through the Trainer checkpoint
+    saved = np.asarray(trainer.defense_state["reputation"])
+    trainer.defense_state = init_reputation(8)
+    step = trainer.restore(ckpt)
+    assert step == 4
+    # restored state is the one saved at step 4 (not the final one)
+    assert trainer.defense_state["reputation"].shape == (8,)
+    assert float(trainer.defense_state["steps"]) == 5  # 0-indexed step 4
+    del saved
+
+
+def test_async_defense_threads_reputation():
+    from repro.data import ClassificationData
+    from repro.models.mlp import build_mlp_model
+    from repro.optim import OptConfig
+    from repro.train.async_sgd import AsyncConfig, run_async_training
+    data = ClassificationData(num_classes=10, dim=16, noise=0.8, seed=0)
+    model = build_mlp_model(dims=(16, 16, 10))
+    rob = RobustConfig(rule="trmean", b=2, q=2,
+                       attack=AttackConfig(name="signflip", num_byzantine=2))
+    hist = run_async_training(
+        model, lambda i: data.batch(i, 8 * 8), rob,
+        OptConfig(name="sgd", lr=0.05),
+        AsyncConfig(num_workers=8, staleness=2), steps=12,
+        eval_fn=lambda p: jnp.float32(0.0),
+        defense_cfg=DefenseConfig())
+    assert hist and hist[-1]["q_hat"] == 2
+
+
+# ---------------------------------------------------------------------------
+# Distributed round-trip: scores through both collective layouts
+# ---------------------------------------------------------------------------
+
+DIST_SCORES = r"""
+import jax, jax.numpy as jnp, numpy as np, json
+from jax.sharding import PartitionSpec as P
+from functools import partial
+from repro.core import (RobustConfig, AttackConfig, robust_aggregate_dist,
+                        aggregate_matrix, registry)
+from jax.flatten_util import ravel_pytree
+
+mesh = jax.make_mesh((4, 2), ('data', 'model'),
+                     axis_types=(jax.sharding.AxisType.Auto,)*2)
+key = jax.random.PRNGKey(1)
+base = 1.0 + 0.1*jax.random.normal(key, (4, 64))
+base = base.at[0].set(-10.0 * base[0])       # worker 0 Byzantine (signflip)
+grads = {'w': base[:, :60], 'b': base[:, 60:]}
+mat = np.stack([ravel_pytree(jax.tree.map(lambda x: x[i], grads))[0]
+                for i in range(4)])
+results = {}
+for rule in registry.score_rules():
+    cfg_l = RobustConfig(rule=rule, b=1, q=1)
+    ref_agg, ref_scores = aggregate_matrix(jnp.asarray(mat), cfg_l,
+                                           with_scores=True)
+    for layout in ['replicated', 'sharded']:
+        cfg = RobustConfig(rule=rule, b=1, q=1, layout=layout)
+        @partial(jax.shard_map, mesh=mesh, in_specs=(P('data'),),
+                 out_specs=(P(), P()), check_vma=False)
+        def f(g):
+            local = jax.tree.map(lambda x: x[0], g)
+            tree, scores = robust_aggregate_dist(
+                local, cfg, worker_axes=('data',), model_axes=('model',),
+                with_scores=True)
+            return ravel_pytree(tree)[0], scores
+        flat, scores = f(grads)
+        ok_agg = bool(np.allclose(np.asarray(flat), np.asarray(ref_agg),
+                                  atol=1e-4))
+        ok_sc = bool(np.allclose(np.asarray(scores), np.asarray(ref_scores),
+                                 atol=1e-4))
+        ok_top = bool(int(np.argmax(np.asarray(scores))) == 0)
+        results[f'{rule}/{layout}'] = ok_agg and ok_sc and ok_top
+
+# reputation-gated aggregation through shard_map: ejecting the Byzantine
+# worker recovers (approximately) the clean-benign aggregate
+cfg = RobustConfig(rule='trmean', b=1, q=1, layout='sharded')
+active = jnp.ones((4,)).at[0].set(0.0)
+@partial(jax.shard_map, mesh=mesh, in_specs=(P('data'), P()),
+         out_specs=P(), check_vma=False)
+def g(g_, act):
+    local = jax.tree.map(lambda x: x[0], g_)
+    return ravel_pytree(robust_aggregate_dist(
+        local, cfg, worker_axes=('data',), model_axes=('model',),
+        active=act))[0]
+gated = np.asarray(g(grads, active))
+results['gate/sharded'] = bool(np.isfinite(gated).all()
+                               and np.abs(gated - 1.0).max() < 1.0)
+print(json.dumps(results))
+"""
+
+
+@pytest.mark.slow
+def test_scores_distributed_roundtrip():
+    """Every emits_scores rule reproduces its single-host scores through
+    both collective layouts (the psum contract), and the reputation gate
+    composes with shard_map."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    out = subprocess.run([sys.executable, "-c", DIST_SCORES],
+                         capture_output=True, text=True, env=env,
+                         timeout=560)
+    assert out.returncode == 0, out.stderr[-4000:]
+    results = json.loads(out.stdout.strip().splitlines()[-1])
+    assert len(results) == 2 * len(registry.score_rules()) + 1
+    bad = [k for k, v in results.items() if not v]
+    assert not bad, bad
+
+
+# ---------------------------------------------------------------------------
+# innerprod attack registration (satellite)
+# ---------------------------------------------------------------------------
+
+def test_innerprod_attack_registered_and_norm_stealthy():
+    spec = registry.get_attack_spec("innerprod")
+    assert spec.kind == "classic" and spec.paper_q == 6
+    key = jax.random.PRNGKey(0)
+    u = 1.0 + 0.1 * jax.random.normal(key, (M, D))
+    cfg = AttackConfig(name="innerprod", num_byzantine=6)
+    from repro.core.attacks import make_attack
+    ut = make_attack(cfg)(key, u)
+    byz_norm = float(jnp.linalg.norm(ut[0]))
+    benign_norm = float(jnp.mean(jnp.linalg.norm(ut[6:], axis=1)))
+    # benign-looking magnitude (the stealth property)...
+    assert byz_norm < 5 * benign_norm
+    # ...but the direction is flipped: negative inner product with the mean
+    correct = jnp.mean(u[6:], axis=0)
+    assert float(jnp.dot(ut[0], correct)) < 0
+    # rows are mutually identical (the collusion that traps Krum selection)
+    np.testing.assert_allclose(np.asarray(ut[0]), np.asarray(ut[5]))
+
+
+def test_innerprod_rejected_in_streaming_mode():
+    from repro.train.streaming import _worker_attack
+    with pytest.raises(ValueError, match="innerprod"):
+        _worker_attack(AttackConfig(name="innerprod", num_byzantine=2),
+                       {"w": jnp.ones((3,))}, jnp.int32(0), KEY)
