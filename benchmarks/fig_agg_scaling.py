@@ -1,0 +1,102 @@
+"""Aggregation hot-path scaling: m × d × b × backend × defense-mode sweep
+over every registered rule, as machine-readable perf rows.
+
+Three modes per configuration make the fusion win auditable
+(``BENCH_agg_scaling.json`` via ``benchmarks/run.py``):
+
+* ``plain``    — ``rule.reduce(u)`` (defense off).
+* ``fused``    — ``rule.reduce_gated_with_scores(u, active)`` (defense on:
+  raw scores + reputation-gated aggregate through the one fused hook).
+* ``composed`` — the registry base-class composition of the same call
+  (``reduce_with_scores`` + ``gate_matrix`` + a second ``reduce``), i.e.
+  exactly the pre-fusion two-pass defense step.
+
+``fused_vs_composed < 1`` for a rule demonstrates its defense-enabled step
+no longer runs the reduction twice; ``fused_vs_plain`` prices the whole
+defense loop relative to a defense-off step.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import registry
+from repro.core.registry import AggregatorRule
+from repro.core.selection import gate_matrix
+
+# Pallas kernels on the CPU backend run in interpret mode (a Python loop
+# per grid block) — keep those rows tiny so the sweep stays a smoke test.
+PALLAS_CPU_D = 2048
+
+
+def _time_call(fn, *args, reps: int = 3) -> float:
+    out = jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    del out
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def main(full: bool = False):
+    ms = (8, 32) if not full else (8, 16, 32, 64)
+    ds = (1 << 14, 1 << 17) if not full else (1 << 14, 1 << 17, 1 << 20)
+    bs = (2,) if not full else (1, 2, 4)
+    on_cpu = jax.default_backend() == "cpu"
+    key = jax.random.PRNGKey(0)
+    rows = []
+    for rule_name in registry.available_rules():
+        cls = registry.get_rule(rule_name)
+        backends = ("xla", "pallas") if cls.has_kernel else ("xla",)
+        for backend in backends:
+            for m in ms:
+                for d in ds:
+                    if backend == "pallas" and on_cpu and d > PALLAS_CPU_D:
+                        continue
+                    for b in (bs if cls.uses_b else (0,)):
+                        if cls.uses_b and not 1 <= b <= (m + 1) // 2 - 1:
+                            continue
+                        u = jax.random.normal(
+                            jax.random.fold_in(key, m * d + b), (m, d))
+                        active = jnp.ones((m,)).at[:max(1, m // 8)].set(0.0)
+                        rule = registry.make_rule(
+                            rule_name, registry.RuleParams(
+                                b=b, q=2 if cls.uses_q else 0,
+                                backend=backend))
+
+                        plain = jax.jit(rule.reduce)
+                        fused = jax.jit(lambda u_, a_, r=rule:
+                                        r.reduce_gated_with_scores(u_, a_))
+
+                        def composed(u_, a_, r=rule):
+                            # the registry default = pre-fusion two passes
+                            return AggregatorRule. \
+                                reduce_sharded_gated_with_scores(
+                                    r, u_, a_, ())
+                        composed = jax.jit(composed)
+
+                        t_plain = _time_call(plain, u)
+                        t_fused = _time_call(fused, u, active)
+                        t_comp = _time_call(composed, u, active)
+                        rows.append({
+                            "rule": rule_name, "backend": backend,
+                            "m": m, "d": d, "b": b,
+                            "us_plain": t_plain, "us_fused": t_fused,
+                            "us_composed": t_comp,
+                            "fused_vs_plain": t_fused / t_plain,
+                            "fused_vs_composed": t_fused / t_comp,
+                        })
+                        print(f"agg_scaling {rule_name:10s} {backend:6s} "
+                              f"m={m:3d} d={d:8d} b={b} "
+                              f"plain={t_plain:10,.0f}us "
+                              f"fused={t_fused:10,.0f}us "
+                              f"composed={t_comp:10,.0f}us "
+                              f"(f/c={t_fused / t_comp:.2f})", flush=True)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

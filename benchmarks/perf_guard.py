@@ -1,0 +1,47 @@
+"""Aggregation perf-regression guard (CI).
+
+Reads a fresh ``results/overhead.csv`` (written by ``benchmarks/overhead.py``)
+and fails if any guarded rule's ``overhead_vs_mean`` exceeds its budget.
+Budgets are half the seed measurements (phocas 9.9x, mediam 10.2x): the
+shared-selection hot path (DESIGN.md §8) must keep dimensional robustness
+within ~a few x of plain averaging, per §4.4's O(dm) complexity claim.
+
+  python -m benchmarks.perf_guard [--csv results/overhead.csv]
+"""
+from __future__ import annotations
+
+import argparse
+import csv
+import sys
+
+# rule -> max allowed overhead_vs_mean (x a plain-mean train step, CPU CI)
+BUDGETS = {
+    "phocas": 5.0,   # seed: 9.9x
+    "mediam": 5.1,   # seed: 10.2x
+}
+
+
+def main(path: str = "results/overhead.csv") -> int:
+    with open(path, newline="") as f:
+        rows = {r["rule"]: float(r["overhead_vs_mean"])
+                for r in csv.DictReader(f)}
+    failures = []
+    for rule, budget in BUDGETS.items():
+        got = rows.get(rule)
+        if got is None:
+            failures.append(f"{rule}: missing from {path}")
+        elif got > budget:
+            failures.append(f"{rule}: overhead {got:.2f}x exceeds "
+                            f"budget {budget:.1f}x")
+        else:
+            print(f"perf_guard {rule}: {got:.2f}x <= {budget:.1f}x OK")
+    for msg in failures:
+        print(f"perf_guard FAIL {msg}", file=sys.stderr)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--csv", default="results/overhead.csv")
+    args = ap.parse_args()
+    sys.exit(main(args.csv))

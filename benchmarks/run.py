@@ -95,6 +95,16 @@ def main(full: bool = False, only: str = "") -> None:
                  f"dim={r['P_crash_dimensional']:.3e};"
                  f"classic={r['P_crash_classic']:.3e}" for r in rows])
 
+    if pick("agg_scaling"):
+        from benchmarks.fig_agg_scaling import main as f
+        _run("agg_scaling", lambda: f(full=full),
+             lambda rows: [
+                 f"agg_scaling/{r['rule']}/{r['backend']}/m{r['m']}/d{r['d']}"
+                 f"/b{r['b']},{r['us_plain']:.0f},"
+                 f"fused={r['us_fused']:.0f}us;"
+                 f"composed={r['us_composed']:.0f}us;"
+                 f"f_vs_c={r['fused_vs_composed']:.2f}" for r in rows])
+
     if pick("overhead"):
         from benchmarks.overhead import main as f
         _run("overhead", lambda: f(),

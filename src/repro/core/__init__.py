@@ -1,6 +1,6 @@
 """Core library: the paper's contribution (robust aggregation) as composable
 JAX modules, dispatched through the pluggable Rule/Attack registry."""
-from repro.core import registry  # noqa: F401
+from repro.core import registry, selection  # noqa: F401
 from repro.core.registry import (  # noqa: F401
     AggregatorRule, RuleParams, register_rule, register_attack,
     available_rules, available_attacks, make_rule,

@@ -24,16 +24,17 @@ single-file plugins under ``repro/core/rules/``.
 """
 from __future__ import annotations
 
-import math
-from typing import Callable, Sequence, Tuple
+from typing import Callable, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 
+from repro.core import selection
 from repro.core.registry import (AggregatorRule, RuleParams,
                                  distance_ratio_scores,
                                  drop_frequency_scores, make_rule,
                                  register_rule)
+from repro.core.selection import ncoords_of as _ncoords_of
 
 Aggregator = Callable[..., jax.Array]
 
@@ -43,7 +44,7 @@ def _as_f32(u: jax.Array) -> jax.Array:
 
 
 # ---------------------------------------------------------------------------
-# Coordinate-wise rules
+# Coordinate-wise rules (all built on the shared selection pass, DESIGN.md §8)
 # ---------------------------------------------------------------------------
 
 def mean(u: jax.Array) -> jax.Array:
@@ -53,90 +54,42 @@ def mean(u: jax.Array) -> jax.Array:
 
 def median(u: jax.Array) -> jax.Array:
     """Coordinate-wise median (= trmean with maximal b for odd m)."""
-    return jnp.median(_as_f32(u), axis=0)
+    return selection.matrix_median(u)
 
 
 def trmean(u: jax.Array, b: int) -> jax.Array:
-    """Coordinate-wise b-trimmed mean (Definition 7).
-
-    Sorts each coordinate over the worker axis and averages the middle
-    ``m - 2b`` order statistics.
-    """
-    m = u.shape[0]
-    if not 0 <= b <= (m + 1) // 2 - 1:
-        raise ValueError(f"b={b} out of range [0, ceil(m/2)-1] for m={m}")
-    s = jnp.sort(_as_f32(u), axis=0)
-    if b == 0:
-        return jnp.mean(s, axis=0)
-    return jnp.mean(s[b : m - b], axis=0)
+    """Coordinate-wise b-trimmed mean (Definition 7): the average of the
+    middle ``m - 2b`` order statistics of each coordinate."""
+    return selection.trim_family(u, b, "trmean")[0]
 
 
 def phocas(u: jax.Array, b: int) -> jax.Array:
     """Phocas (Definition 8): average of the (m-b) values nearest to the
     b-trimmed mean, per coordinate."""
-    m = u.shape[0]
-    uf = _as_f32(u)
-    center = trmean(uf, b)
-    if b == 0:
-        return mean(uf)
-    dist = jnp.abs(uf - center[None])
-    # Keep the (m-b) nearest == drop the b farthest.  Implemented as a
-    # top-k free masked sum: sort distances, threshold at the (m-b)-th.
-    order = jnp.argsort(dist, axis=0)  # ascending distance
-    ranks = jnp.argsort(order, axis=0)  # rank of each entry per coordinate
-    keep = (ranks < (m - b)).astype(uf.dtype)
-    return jnp.sum(uf * keep, axis=0) / (m - b)
+    return selection.trim_family(u, b, "phocas")[0]
 
 
 # ---------------------------------------------------------------------------
 # Coordinate-wise selection statistics (defense suspicion signal)
 # ---------------------------------------------------------------------------
 
-def _ncoords_of(u: jax.Array) -> jax.Array:
-    """Static count of coordinates per worker (trailing-shape product)."""
-    return jnp.float32(math.prod(u.shape[1:]) or 1)
-
-
 def trmean_stats(u: jax.Array, b: int) -> Tuple[jax.Array, jax.Array,
                                                 jax.Array]:
     """Trimmed mean + its selection mask: ``(agg, drop_counts, ncoords)``.
 
     ``drop_counts[i]`` = number of coordinates where worker i's value was
-    among the b smallest or b largest (i.e. trimmed away).  The aggregate
-    is :func:`trmean` itself (single source — the rank mask exists only
-    for the counts; XLA CSEs the shared sort).
+    among the b smallest or b largest (i.e. trimmed away), with stable-rank
+    tie handling identical to the historical double-argsort mask.
     """
-    m = u.shape[0]
-    uf = _as_f32(u)
-    agg = trmean(uf, b)
-    if b == 0:
-        return agg, jnp.zeros((m,), jnp.float32), _ncoords_of(u)
-    ranks = jnp.argsort(jnp.argsort(uf, axis=0), axis=0)
-    dropped = (ranks < b) | (ranks >= m - b)
-    counts = jnp.sum(dropped, axis=tuple(range(1, uf.ndim))
-                     ).astype(jnp.float32)
-    return agg, counts, _ncoords_of(u)
+    return selection.trim_family(u, b, "trmean", with_scores=True)
 
 
 def phocas_stats(u: jax.Array, b: int) -> Tuple[jax.Array, jax.Array,
                                                 jax.Array]:
     """Phocas + its selection mask: ``(agg, drop_counts, ncoords)`` where
     ``drop_counts[i]`` counts coordinates where worker i was among the b
-    values farthest from the trimmed mean (dropped by Definition 8).  The
-    aggregate is :func:`phocas` itself (single source — the rank mask
-    exists only for the counts; XLA CSEs the shared center/distances)."""
-    m = u.shape[0]
-    uf = _as_f32(u)
-    agg = phocas(uf, b)
-    if b == 0:
-        return agg, jnp.zeros((m,), jnp.float32), _ncoords_of(u)
-    center = trmean(uf, b)
-    dist = jnp.abs(uf - center[None])
-    ranks = jnp.argsort(jnp.argsort(dist, axis=0), axis=0)
-    dropped = ranks >= (m - b)
-    counts = jnp.sum(dropped, axis=tuple(range(1, uf.ndim))
-                     ).astype(jnp.float32)
-    return agg, counts, _ncoords_of(u)
+    values farthest from the trimmed mean (dropped by Definition 8)."""
+    return selection.trim_family(u, b, "phocas", with_scores=True)
 
 
 def trim_mask_scores(stats_fn, mat: jax.Array, b: int, baseline: float,
@@ -152,6 +105,21 @@ def trim_mask_scores(stats_fn, mat: jax.Array, b: int, baseline: float,
     counts = _psum(counts, axes)
     ncoords = _psum(ncoords, axes)
     return agg, drop_frequency_scores(counts, ncoords, baseline)
+
+
+def fused_trim_family_scores(mat: jax.Array, b: int, kind: str,
+                             baseline: float,
+                             active: Optional[jax.Array],
+                             psum_axes: Sequence[str]):
+    """One-pass defense path for the trim family (trmean/phocas/mediam):
+    raw drop-count scores AND the reputation-gated aggregate from a single
+    shared selection pass (``selection.trim_family``), then the standard
+    psum-before-normalize score plumbing.  Backs the rules'
+    ``reduce_sharded_gated_with_scores`` overrides."""
+    return trim_mask_scores(
+        lambda u, b_: selection.trim_family(u, b_, kind, active=active,
+                                            with_scores=True),
+        mat, b, baseline, psum_axes)
 
 
 # ---------------------------------------------------------------------------
@@ -203,14 +171,7 @@ def multikrum(u: jax.Array, q: int, k: int | None = None) -> jax.Array:
 def geomedian(u: jax.Array, iters: int = 8, eps: float = 1e-8) -> jax.Array:
     """Geometric median via Weiszfeld iterations (Chen et al. family baseline)."""
     uf = _as_f32(u.reshape(u.shape[0], -1))
-
-    def step(z, _):
-        w = 1.0 / jnp.maximum(jnp.linalg.norm(uf - z[None], axis=1), eps)
-        z_new = jnp.sum(uf * w[:, None], axis=0) / jnp.sum(w)
-        return z_new, None
-
-    z0 = jnp.mean(uf, axis=0)
-    z, _ = jax.lax.scan(step, z0, None, length=iters)
+    z = geomedian_sharded(uf, (), iters=iters, eps=eps)
     return z.reshape(u.shape[1:])
 
 
@@ -237,17 +198,46 @@ def krum_scores_sharded(mat: jax.Array, q: int,
     return jnp.sum(nearest, axis=1)
 
 
+# Pre-Weiszfeld row clipping: rows whose norm exceeds this multiple of the
+# median row norm are rescaled onto that cap.  Under the omniscient attack's
+# 1e20 blow-up the un-clipped fixed point cannot localize in a small fixed
+# iteration budget (every finite-precision weight underflows against a 1e20
+# row), which destroyed the rule's suspicion scores; benign rows share the
+# median's norm scale to within small factors, so a generous cap leaves
+# clean runs bit-identical (ROADMAP item d).
+WEISZFELD_CLIP_FACTOR = 4.0
+
+
+def clip_rows_to_norm_quantile(mat: jax.Array, psum_axes: Sequence[str],
+                               factor: float = WEISZFELD_CLIP_FACTOR,
+                               eps: float = 1e-12) -> jax.Array:
+    """Rescale rows of a (possibly dim-sharded) (m, D_slice) matrix so no
+    row's full-vector norm exceeds ``factor`` x the median row norm."""
+    from repro.dist.collectives import psum_axes as _psum
+    sq = _psum(jnp.sum(mat * mat, axis=1), tuple(psum_axes))
+    norms = jnp.sqrt(sq)
+    cap = factor * jnp.median(norms)
+    # A zero median norm (most rows exactly zero) carries no scale
+    # information — leave the matrix untouched rather than clip to zero.
+    scale = jnp.where(cap > 0.0,
+                      jnp.minimum(1.0, cap / jnp.maximum(norms, eps)), 1.0)
+    return mat * scale[:, None]
+
+
 def geomedian_sharded(mat: jax.Array, psum_axes: Sequence[str],
                       iters: int = 8, eps: float = 1e-8,
                       with_dists: bool = False):
     """Weiszfeld iterations on a dim-sharded (m, D_slice) matrix: partial
     squared distances are psum'd over ``psum_axes`` so weights use the full
-    vector geometry while updates stay slice-local.
+    vector geometry while updates stay slice-local.  Rows are norm-clipped
+    to a robust quantile first so a 1e20 adversarial row cannot stall the
+    fixed point (see :func:`clip_rows_to_norm_quantile`).
 
     With ``with_dists=True`` also returns each worker's full-vector
     distance to the final iterate (psum'd — the inverse of the Weiszfeld
     weight, the rule's per-worker suspicion statistic)."""
     from repro.dist.collectives import psum_axes as _psum
+    mat = clip_rows_to_norm_quantile(mat, psum_axes)
 
     def step(z, _):
         d2 = jnp.sum((mat - z[None]) ** 2, axis=1)
@@ -290,8 +280,50 @@ class MedianRule(AggregatorRule):
         return median(u)
 
 
+class _TrimFamilyRule(AggregatorRule):
+    """Shared score/gate plumbing for the trim-family rules.
+
+    Subclasses set ``trim_kind`` (a ``selection.trim_family`` kind) and
+    ``_baseline(m)`` — the drop frequency an exchangeable benign worker
+    expects, subtracted out by ``drop_frequency_scores``.  The fused
+    defense path and the kernel-backed score path are identical across the
+    family, so they live here once.
+    """
+    trim_kind: str = ""
+
+    def _baseline(self, m: int) -> float:
+        raise NotImplementedError
+
+    def _kernel_stats(self, u, b):
+        """(agg, drop_counts, ncoords) via the rule's Pallas kernel."""
+        raise NotImplementedError
+
+    def _stats(self, u, b):
+        if self.backend == "pallas":
+            from repro.kernels.trmean.kernel import COUNTS_LANES
+            if u.shape[0] <= COUNTS_LANES:
+                return self._kernel_stats(u, b)
+            # counts kernels pack m into one 128-lane output row; larger
+            # fleets fall back to the XLA selection path rather than crash
+        return selection.trim_family(u, b, self.trim_kind, with_scores=True)
+
+    def reduce_sharded_with_scores(self, mat, psum_axes):
+        return trim_mask_scores(self._stats, mat, self.params.b,
+                                self._baseline(mat.shape[0]), psum_axes)
+
+    def reduce_sharded_gated_with_scores(self, mat, active, psum_axes):
+        if self.backend == "pallas":
+            # kernel path: counts from the score kernel, gated aggregate
+            # from a second kernel launch (the base-class composition).
+            return super().reduce_sharded_gated_with_scores(
+                mat, active, psum_axes)
+        return fused_trim_family_scores(mat, self.params.b, self.trim_kind,
+                                        self._baseline(mat.shape[0]),
+                                        active, psum_axes)
+
+
 @register_rule
-class TrmeanRule(AggregatorRule):
+class TrmeanRule(_TrimFamilyRule):
     """b-trimmed coordinate-wise mean (Definition 7)."""
     name = "trmean"
     coordinate_wise = True
@@ -300,6 +332,11 @@ class TrmeanRule(AggregatorRule):
     has_kernel = True
     supports_streaming = True
     emits_scores = True
+    trim_kind = "trmean"
+
+    def _baseline(self, m: int) -> float:
+        # benign baseline: each coordinate trims exactly 2b of m values
+        return 2.0 * self.params.b / m
 
     def _reduce_xla(self, u):
         return trmean(u, self.params.b)
@@ -308,15 +345,14 @@ class TrmeanRule(AggregatorRule):
         from repro.kernels.trmean.ops import trmean as ktrmean
         return ktrmean(u, self.params.b)
 
-    def reduce_sharded_with_scores(self, mat, psum_axes):
-        # benign baseline: each coordinate trims exactly 2b of m values
-        return trim_mask_scores(trmean_stats, mat, self.params.b,
-                                 2.0 * self.params.b / mat.shape[0],
-                                 psum_axes)
+    def _kernel_stats(self, u, b):
+        from repro.kernels.trmean.ops import trmean_with_counts
+        agg, counts = trmean_with_counts(u.reshape(u.shape[0], -1), b)
+        return agg.reshape(u.shape[1:]), counts, _ncoords_of(u)
 
 
 @register_rule
-class PhocasRule(AggregatorRule):
+class PhocasRule(_TrimFamilyRule):
     """Phocas (Definition 8)."""
     name = "phocas"
     coordinate_wise = True
@@ -325,6 +361,11 @@ class PhocasRule(AggregatorRule):
     has_kernel = True
     supports_streaming = True
     emits_scores = True
+    trim_kind = "phocas"
+
+    def _baseline(self, m: int) -> float:
+        # benign baseline: each coordinate drops the b farthest of m values
+        return float(self.params.b) / m
 
     def _reduce_xla(self, u):
         return phocas(u, self.params.b)
@@ -333,11 +374,10 @@ class PhocasRule(AggregatorRule):
         from repro.kernels.phocas.ops import phocas as kphocas
         return kphocas(u, self.params.b)
 
-    def reduce_sharded_with_scores(self, mat, psum_axes):
-        # benign baseline: each coordinate drops the b farthest of m values
-        return trim_mask_scores(phocas_stats, mat, self.params.b,
-                                 float(self.params.b) / mat.shape[0],
-                                 psum_axes)
+    def _kernel_stats(self, u, b):
+        from repro.kernels.phocas.ops import phocas_with_counts
+        agg, counts = phocas_with_counts(u.reshape(u.shape[0], -1), b)
+        return agg.reshape(u.shape[1:]), counts, _ncoords_of(u)
 
 
 @register_rule

@@ -133,6 +133,34 @@ class AggregatorRule:
         agg = self.reduce_sharded(mat, psum_axes)
         return agg, jnp.zeros((mat.shape[0],), jnp.float32)
 
+    def reduce_gated_with_scores(
+            self, u: jax.Array,
+            active: Optional[jax.Array]) -> Tuple[jax.Array, jax.Array]:
+        """Fused defense step: reputation-gated aggregate + raw scores."""
+        return self.reduce_sharded_gated_with_scores(u, active, ())
+
+    def reduce_sharded_gated_with_scores(
+            self, mat: jax.Array, active: Optional[jax.Array],
+            psum_axes: Sequence[str]) -> Tuple[jax.Array, jax.Array]:
+        """The defense-enabled aggregation in ONE hook (DESIGN.md §8).
+
+        Returns ``(agg, scores)`` where ``scores`` observe the RAW
+        submissions (the flap-prevention invariant of §7) while ``agg``
+        aggregates the reputation-gated matrix (``active`` ejected rows
+        replaced by the raw median row; ``active=None`` = no gate).
+
+        This default composes the two existing hooks — semantically the
+        pre-fusion two-pass path.  Rules whose selection state covers both
+        outputs (the coordinate-wise trim family) override it so the gate's
+        median row, the score masks, and the gated re-aggregation all read
+        one shared selection pass instead of running the rule twice.
+        """
+        agg, scores = self.reduce_sharded_with_scores(mat, psum_axes)
+        if active is not None:
+            from repro.core.selection import gate_matrix
+            agg = self.reduce_sharded(gate_matrix(mat, active), psum_axes)
+        return agg, scores
+
     # --- implementations (override) ---
 
     def _reduce_xla(self, u: jax.Array) -> jax.Array:

@@ -33,6 +33,10 @@ from jax.flatten_util import ravel_pytree
 
 from repro.core import registry
 from repro.core.attacks import AttackConfig, make_attack
+# The gate lives in core/selection.py (so the registry's default fused hook
+# can use it without importing this engine module); re-exported here because
+# it is part of the engine's public defense surface.
+from repro.core.selection import gate_matrix  # noqa: F401
 from repro.dist.collectives import (
     all_to_all_scatter as _a2a_scatter,
     axis_size as _axis_size,
@@ -87,25 +91,6 @@ class RobustConfig:
 
 
 # ---------------------------------------------------------------------------
-# Reputation gate (repro.defense adaptive aggregation)
-# ---------------------------------------------------------------------------
-
-def gate_matrix(mat: jax.Array, active: jax.Array) -> jax.Array:
-    """Replace ejected workers' rows before the rule runs.
-
-    ``active`` is the (m,) 0/1 mask from the reputation state
-    (``repro.defense.reputation``).  Ejected rows are replaced with the
-    coordinate-wise median of the matrix — a dimensional-robust proxy that
-    is exact slice-locally in both collective layouts, so the gate composes
-    with ``shard_map`` without extra collectives.  The rule still sees m
-    rows (its b/q parameters keep their meaning) but an ejected worker's
-    values can no longer move any order statistic beyond the median."""
-    med = jnp.median(mat, axis=0)
-    keep = active.reshape((mat.shape[0],) + (1,) * (mat.ndim - 1))
-    return jnp.where(keep > 0, mat, med[None].astype(mat.dtype))
-
-
-# ---------------------------------------------------------------------------
 # Local (single host / test) path
 # ---------------------------------------------------------------------------
 
@@ -132,10 +117,10 @@ def aggregate_matrix(u: jax.Array, cfg: RobustConfig,
         uf = attack(key, uf)
     rule = cfg.rule_obj()
     if with_scores:
-        agg, scores = rule.reduce_with_scores(uf)
-        if active is not None:
-            agg = rule.reduce(gate_matrix(uf, active))
-        return agg, scores
+        # One fused hook: raw-submission scores + gated aggregate.  The
+        # registry default composes the old two-pass path; the trim-family
+        # rules override it with a single shared selection pass.
+        return rule.reduce_gated_with_scores(uf, active)
     if active is not None:
         uf = gate_matrix(uf, active)
     return rule.reduce(uf)
@@ -210,12 +195,10 @@ def robust_aggregate_dist(grad_tree, cfg: RobustConfig,
     def _reduce(mat, psum_axes):
         # Scores observe RAW submissions; the aggregate uses the gated
         # matrix (see aggregate_matrix: prevents eject/readmit flapping).
+        # Both come out of the one fused hook.
         if with_scores:
-            agg, scores = rule.reduce_sharded_with_scores(mat, psum_axes)
-            if active is not None:
-                agg = rule.reduce_sharded(gate_matrix(mat, active),
-                                          psum_axes)
-            return agg, scores
+            return rule.reduce_sharded_gated_with_scores(mat, active,
+                                                         psum_axes)
         if active is not None:
             mat = gate_matrix(mat, active)
         return rule.reduce_sharded(mat, psum_axes), None

@@ -19,6 +19,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.core import selection
 from repro.core.registry import AggregatorRule, register_rule
 
 
@@ -43,4 +44,6 @@ class MarginalMedianOfMeans(AggregatorRule):
         counts = jnp.sum(onehot, axis=1)              # (g,)
         sums = jnp.tensordot(onehot, uf, axes=(1, 0))  # (g, *trailing)
         means = sums / counts.reshape((g,) + (1,) * (uf.ndim - 1))
-        return jnp.median(means, axis=0)
+        # marginal median over the g group means via the shared network
+        # (g is small, so the fused row-op path beats jnp.median's sort)
+        return selection.matrix_median(means)

@@ -10,51 +10,33 @@ no trim parameter), slightly looser variance constant.
 This module is the single-file plugin template: the class below plus its
 ``@register_rule`` decoration is ALL that is needed for the rule to appear
 in ``get_aggregator``, the train CLI, the fig2/fig3 sweeps, and the
-registry round-trip tests.
+registry round-trip tests.  Being a trim-family rule, it subclasses the
+shared ``_TrimFamilyRule`` plumbing so the median center, the
+nearest-(m-b) window, the drop-count scores, and the defense gate's median
+row all come from ONE shared selection pass (``core/selection.py``,
+DESIGN.md §8) instead of the two sorts the pre-fusion implementation paid.
 """
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
 
-from repro.core.registry import AggregatorRule, register_rule
+from repro.core import selection
+from repro.core.aggregators import _TrimFamilyRule
+from repro.core.registry import register_rule
 
 
 @register_rule
-class MeanAroundMedian(AggregatorRule):
+class MeanAroundMedian(_TrimFamilyRule):
     name = "mediam"
     coordinate_wise = True
     resilience = "dimensional"
     uses_b = True
     emits_scores = True
+    trim_kind = "mediam"
 
-    @staticmethod
-    def _stats(u: jax.Array, b: int):
-        """(agg, drop_counts (m,), ncoords) — the selection mask doubles as
-        the rule's per-worker suspicion signal (DESIGN.md §7)."""
-        from repro.core.aggregators import _ncoords_of
-        m = u.shape[0]
-        if not 0 <= b <= (m + 1) // 2 - 1:
-            raise ValueError(f"b={b} out of range [0, ceil(m/2)-1] for m={m}")
-        uf = u.astype(jnp.float32) if u.dtype != jnp.float32 else u
-        if b == 0:
-            return (jnp.mean(uf, axis=0), jnp.zeros((m,), jnp.float32),
-                    _ncoords_of(u))
-        center = jnp.median(uf, axis=0)
-        dist = jnp.abs(uf - center[None])
-        order = jnp.argsort(dist, axis=0)             # ascending distance
-        ranks = jnp.argsort(order, axis=0)            # per-coordinate rank
-        dropped = ranks >= (m - b)
-        counts = jnp.sum(dropped, axis=tuple(range(1, uf.ndim))
-                         ).astype(jnp.float32)
-        agg = jnp.sum(uf * (~dropped).astype(uf.dtype), axis=0) / (m - b)
-        return agg, counts, _ncoords_of(u)
+    def _baseline(self, m: int) -> float:
+        # benign baseline: each coordinate drops the b farthest of m values
+        return float(self.params.b) / m
 
     def _reduce_xla(self, u: jax.Array) -> jax.Array:
-        return self._stats(u, self.params.b)[0]
-
-    def reduce_sharded_with_scores(self, mat, psum_axes):
-        from repro.core.aggregators import trim_mask_scores
-        return trim_mask_scores(self._stats, mat, self.params.b,
-                                float(self.params.b) / mat.shape[0],
-                                psum_axes)
+        return selection.trim_family(u, self.params.b, "mediam")[0]

@@ -36,6 +36,25 @@ def extract_max(u: jax.Array, valid: jax.Array, total: jax.Array):
     return valid & ~onehot, total - vals, vals
 
 
+def extract_max_stable(u: jax.Array, valid: jax.Array, total: jax.Array):
+    """:func:`extract_max` with ties broken on the HIGHEST worker index.
+
+    ``argmax`` prefers the lowest index; the stable-argsort oracle ranks
+    equal values by index ascending, so the *largest* (value, index) pair —
+    the one a stable trim drops first — is the highest-indexed tie.  The
+    aggregate can't tell (equal values sum equally) but the per-worker drop
+    masks the score kernels emit can, so they must extract with this
+    variant to match the XLA stable-rank counts bit-for-bit.
+    """
+    masked = jnp.where(valid, u, -jnp.inf)
+    iota = jax.lax.broadcasted_iota(jnp.int32, u.shape, 0)
+    mx = jnp.max(masked, axis=0)
+    idx = jnp.max(jnp.where(masked == mx[None], iota, -1), axis=0)
+    onehot = iota == idx[None]
+    vals = jnp.sum(jnp.where(onehot, u, 0.0), axis=0)
+    return valid & ~onehot, total - vals, vals
+
+
 def pad_lanes(u: jax.Array, tile: int):
     """Pad the lane (last) axis of (m, d) to a multiple of ``tile``."""
     d = u.shape[-1]

@@ -3,6 +3,6 @@
 The registered rules (``repro.core.aggregators``) reach these through their
 ``_reduce_pallas`` implementations when ``RobustConfig.backend`` resolves to
 ``"pallas"``; the facade remains for direct kernel benchmarking."""
-from repro.kernels.trmean.ops import trmean  # noqa: F401
-from repro.kernels.phocas.ops import phocas  # noqa: F401
+from repro.kernels.trmean.ops import trmean, trmean_with_counts  # noqa: F401
+from repro.kernels.phocas.ops import phocas, phocas_with_counts  # noqa: F401
 from repro.kernels.krum.ops import krum, multikrum, pairwise_sq_dists  # noqa: F401

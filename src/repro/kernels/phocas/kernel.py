@@ -1,10 +1,25 @@
-"""Pallas TPU kernel: fused Phocas aggregation.
+"""Pallas TPU kernels: fused Phocas aggregation.
 
 Single VMEM pass per (m, TILE_D) block: computes the b-trimmed mean (as in
-the trmean kernel), then drops the b values farthest from it by b masked
-max-extractions on |u - t| and averages the remaining m-b — the trimmed mean
-never round-trips to HBM, which is the fusion win over running trmean + a
-second distance/selection pass (2 fewer HBM reads of the m×d matrix).
+the trmean kernel), then drops the b values farthest from it and averages
+the remaining m-b — the trimmed mean never round-trips to HBM, which is the
+fusion win over running trmean + a second distance/selection pass (2 fewer
+HBM reads of the m×d matrix).
+
+Two variants share the public entry points (DESIGN.md §8):
+
+* **extraction** (small b): b masked max-extractions on |u - t| along the
+  sublane axis, tie-broken on the HIGHEST worker index to match the
+  stable-argsort oracle — O(3b) unrolled passes in total.
+* **network** (large b): one Batcher sorting network along the sublane axis
+  (``core/selection.py``); the kept (m-b)-nearest set is a contiguous
+  window of the sorted order, so the selection reduces to b+1 statically
+  sliced candidate windows over a prefix sum — O(log²m) stages + O(b)
+  cheap window ops.
+
+The ``*_counts`` kernel additionally emits per-worker drop counts (the
+defense suspicion statistic) as a second per-grid-block output, with padded
+lanes masked out.
 """
 from __future__ import annotations
 
@@ -14,35 +29,77 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.core.selection import (nearest_window_sum, sorted_rows,
+                                  stable_ranks, trimmed_mean_of_sorted)
 from repro.kernels.common import (DEFAULT_TILE_D, INTERPRET, extract_max,
                                   extract_min, pad_lanes)
+from repro.kernels.trmean.kernel import (COUNTS_LANES, _counts_row,
+                                         _lane_mask, _rows_of, use_network)
 
 
-def _phocas_kernel(u_ref, o_ref, *, b: int, m: int):
-    u = u_ref[...].astype(jnp.float32)              # (m, TILE_D)
+def _trimmed_center(u, *, b: int, m: int):
+    """(total, trimmed-mean center) of an (m, TILE_D) block."""
     total = jnp.sum(u, axis=0)
-    # --- trimmed mean (fused) ---
     tm_total = total
     valid = jnp.ones(u.shape, jnp.bool_)
     for _ in range(b):
         valid, tm_total, _ = extract_min(u, valid, tm_total)
     for _ in range(b):
         valid, tm_total, _ = extract_max(u, valid, tm_total)
-    center = tm_total / (m - 2 * b)                 # (TILE_D,)
-    # --- drop the b farthest-from-center values ---
+    return total, tm_total / (m - 2 * b)
+
+
+def _drop_farthest(u, center, total, *, b: int):
+    """Remove the b values farthest from ``center`` from ``total``.
+
+    Ties break on the HIGHEST worker index, matching the stable-argsort
+    oracle (which ranks lower indices as "nearer" on equal distance).
+    Returns (kept total, (m, TILE_D) dropped mask).
+    """
     dist = jnp.abs(u - center[None])
-    keep_total = total
     iota = jax.lax.broadcasted_iota(jnp.int32, u.shape, 0)
+    dropped = jnp.zeros(u.shape, jnp.bool_)
     for _ in range(b):
         mx = jnp.max(dist, axis=0)
-        # Tie-break on the HIGHEST worker index, matching the stable-argsort
-        # oracle (which ranks lower indices as "nearer" on equal distance).
         idx = jnp.max(jnp.where(dist == mx[None], iota, -1), axis=0)
         onehot = iota == idx[None]
-        dropped = jnp.sum(jnp.where(onehot, u, 0.0), axis=0)
-        keep_total = keep_total - dropped
+        total = total - jnp.sum(jnp.where(onehot, u, 0.0), axis=0)
         dist = jnp.where(onehot, -jnp.inf, dist)
+        dropped = dropped | onehot
+    return total, dropped
+
+
+def _phocas_kernel(u_ref, o_ref, *, b: int, m: int):
+    u = u_ref[...].astype(jnp.float32)              # (m, TILE_D)
+    total, center = _trimmed_center(u, b=b, m=m)
+    keep_total, _ = _drop_farthest(u, center, total, b=b)
     o_ref[...] = (keep_total / (m - b))[None]
+
+
+def _phocas_kernel_net(u_ref, o_ref, *, b: int, m: int):
+    u = u_ref[...].astype(jnp.float32)
+    srows = sorted_rows(_rows_of(u, m))
+    center = trimmed_mean_of_sorted(srows, b)
+    total, _ = nearest_window_sum(srows, center, b)
+    o_ref[...] = (total / (m - b))[None]
+
+
+def _phocas_counts_kernel(u_ref, o_ref, c_ref, *, b: int, m: int, d: int,
+                          tile_d: int, network: bool):
+    u = u_ref[...].astype(jnp.float32)
+    lane_ok = _lane_mask(u.shape, block=pl.program_id(0), tile_d=tile_d, d=d)
+    if network:
+        rows = _rows_of(u, m)
+        srows = sorted_rows(rows)
+        center = trimmed_mean_of_sorted(srows, b)
+        total, _ = nearest_window_sum(srows, center, b)
+        ranks = stable_ranks([jnp.abs(r - center) for r in rows])
+        dropped = jnp.stack([r >= m - b for r in ranks])
+    else:
+        total, center = _trimmed_center(u, b=b, m=m)
+        total, dropped = _drop_farthest(u, center, total, b=b)
+    o_ref[...] = (total / (m - b))[None]
+    c_ref[...] = _counts_row(dropped, lane_ok, m)
 
 
 @functools.partial(jax.jit, static_argnames=("b", "tile_d", "interpret"))
@@ -55,8 +112,9 @@ def phocas_pallas(u: jax.Array, b: int, *, tile_d: int = DEFAULT_TILE_D,
     u = u.astype(jnp.float32)
     u, d = pad_lanes(u, tile_d)
     dp = u.shape[1]
+    body = _phocas_kernel_net if use_network(m, 3 * b) else _phocas_kernel
     out = pl.pallas_call(
-        functools.partial(_phocas_kernel, b=b, m=m),
+        functools.partial(body, b=b, m=m),
         grid=(dp // tile_d,),
         in_specs=[pl.BlockSpec((m, tile_d), lambda i: (0, i))],
         out_specs=pl.BlockSpec((1, tile_d), lambda i: (0, i)),
@@ -64,3 +122,33 @@ def phocas_pallas(u: jax.Array, b: int, *, tile_d: int = DEFAULT_TILE_D,
         interpret=interpret,
     )(u)
     return out[0, :d]
+
+
+@functools.partial(jax.jit, static_argnames=("b", "tile_d", "interpret"))
+def phocas_counts_pallas(u: jax.Array, b: int, *,
+                         tile_d: int = DEFAULT_TILE_D,
+                         interpret: bool = INTERPRET):
+    """(m, d) f32 -> ((d,) Phocas aggregate, (m,) per-worker drop counts)."""
+    m = u.shape[0]
+    if not 0 <= b <= (m + 1) // 2 - 1:
+        raise ValueError(f"b={b} out of range for m={m}")
+    if m > COUNTS_LANES:
+        raise ValueError(f"counts kernel packs m into {COUNTS_LANES} lanes; "
+                         f"got m={m}")
+    u = u.astype(jnp.float32)
+    u, d = pad_lanes(u, tile_d)
+    dp = u.shape[1]
+    nblocks = dp // tile_d
+    agg, counts = pl.pallas_call(
+        functools.partial(_phocas_counts_kernel, b=b, m=m, d=d,
+                          tile_d=tile_d, network=use_network(m, 3 * b)),
+        grid=(nblocks,),
+        in_specs=[pl.BlockSpec((m, tile_d), lambda i: (0, i))],
+        out_specs=[pl.BlockSpec((1, tile_d), lambda i: (0, i)),
+                   pl.BlockSpec((1, COUNTS_LANES), lambda i: (i, 0))],
+        out_shape=[jax.ShapeDtypeStruct((1, dp), jnp.float32),
+                   jax.ShapeDtypeStruct((nblocks, COUNTS_LANES),
+                                        jnp.float32)],
+        interpret=interpret,
+    )(u)
+    return agg[0, :d], jnp.sum(counts, axis=0)[:m]

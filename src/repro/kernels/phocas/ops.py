@@ -1,9 +1,10 @@
-"""Jit'd public wrapper for the fused Phocas kernel."""
+"""Jit'd public wrappers for the fused Phocas kernels."""
 from __future__ import annotations
 
 import jax
+import jax.numpy as jnp
 
-from repro.kernels.phocas.kernel import phocas_pallas
+from repro.kernels.phocas.kernel import phocas_counts_pallas, phocas_pallas
 from repro.kernels.phocas.ref import phocas_ref
 
 
@@ -12,3 +13,17 @@ def phocas(u: jax.Array, b: int, *, use_kernel: bool = True) -> jax.Array:
     if b == 0 or not use_kernel:
         return phocas_ref(u, b)
     return phocas_pallas(u, b)
+
+
+def phocas_with_counts(u: jax.Array, b: int):
+    """Phocas aggregate AND per-worker drop counts; (m, d) -> ((d,), (m,)).
+
+    The second output is the defense suspicion statistic (DESIGN.md §7/§8):
+    how many coordinates dropped worker i as one of the b farthest from the
+    center.  Backed by the score-emitting kernel so ``emits_scores`` no
+    longer forces the XLA fallback.
+    """
+    if b == 0:
+        return u.astype(jnp.float32).mean(axis=0), \
+            jnp.zeros((u.shape[0],), jnp.float32)
+    return phocas_counts_pallas(u, b)

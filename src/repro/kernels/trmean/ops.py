@@ -1,9 +1,10 @@
-"""Jit'd public wrapper for the trimmed-mean kernel."""
+"""Jit'd public wrappers for the trimmed-mean kernels."""
 from __future__ import annotations
 
 import jax
+import jax.numpy as jnp
 
-from repro.kernels.trmean.kernel import trmean_pallas
+from repro.kernels.trmean.kernel import trmean_counts_pallas, trmean_pallas
 from repro.kernels.trmean.ref import trmean_ref
 
 
@@ -16,3 +17,15 @@ def trmean(u: jax.Array, b: int, *, use_kernel: bool = True) -> jax.Array:
     if b == 0 or not use_kernel:
         return trmean_ref(u, b) if b else u.mean(axis=0)
     return trmean_pallas(u, b)
+
+
+def trmean_with_counts(u: jax.Array, b: int):
+    """Trimmed mean AND per-worker drop counts; (m, d) -> ((d,), (m,)).
+
+    The second output is the defense suspicion statistic (DESIGN.md §7/§8):
+    how many coordinates trimmed worker i away.  Backed by the score-
+    emitting kernel so ``emits_scores`` no longer forces the XLA fallback.
+    """
+    if b == 0:
+        return u.mean(axis=0), jnp.zeros((u.shape[0],), jnp.float32)
+    return trmean_counts_pallas(u, b)
