@@ -4,20 +4,21 @@ Paper setup: m=20 workers, MLP, lr 0.1, batch 32/worker.  The offline
 container substitutes the Gaussian-mixture classification task for MNIST
 (DESIGN.md §2) and defaults to reduced dims/steps; --full restores
 paper-scale rounds.
+
+Every benchmark cell is a declarative ``repro.experiment.ScenarioSpec``
+(:func:`scenario_for`) executed through the single ``run_experiment`` entry
+point, and every result row records the spec that produced it
+(``row["scenario"]``) — the provenance column ``benchmarks/run.py``
+persists into the ``BENCH_*.json`` artifacts.
 """
 from __future__ import annotations
 
 import dataclasses
 from typing import Dict, Optional
 
-import jax
-
+from repro import experiment
 from repro.core import AttackConfig, RobustConfig, registry
-from repro.data import ClassificationData, make_worker_batches
-from repro.models.mlp import build_mlp_model, mlp_accuracy
-from repro.models.cnn import build_cnn_model, cnn_topk_accuracy
-from repro.optim import OptConfig, init_opt_state
-from repro.train import make_train_step
+from repro.experiment import DataSpec, ModelSpec, ScenarioSpec
 
 M = 20                         # paper: 20 worker processes
 
@@ -59,54 +60,49 @@ class ExpConfig:
         return cls(steps=500, batch_per_worker=32, dim=784, eval_every=25)
 
 
-def run_experiment(rule: str, attack: str, cfg: Optional[ExpConfig] = None,
-                   *, b: Optional[int] = None, verbose: bool = False) -> dict:
-    """Train under (rule × attack); returns accuracy curve + final/max acc."""
+def scenario_for(rule: str, attack: str, cfg: Optional[ExpConfig] = None,
+                 *, b: Optional[int] = None,
+                 topology: str = "sync_ps") -> ScenarioSpec:
+    """The (rule × attack) benchmark cell as a declarative ScenarioSpec."""
     cfg = cfg or ExpConfig()
     b = cfg.b if b is None else b
     if cfg.model == "cnn":
         size = 16
-        data = ClassificationData(num_classes=10, dim=size * size * 3,
-                                  noise=1.0, seed=cfg.seed)
-        model = build_cnn_model(in_ch=3, size=size)
-        reshape = lambda x: x.reshape(-1, size, size, 3)
-        acc_fn = lambda p, t: cnn_topk_accuracy(
-            p, {"x": reshape(t["x"]), "y": t["y"]}, k=3)
+        model = ModelSpec(kind="cnn", cnn_size=size, cnn_channels=3)
+        data = DataSpec(kind="classification", dim=size * size * 3,
+                        num_classes=10, noise=1.0, seed=cfg.seed,
+                        batch_per_worker=cfg.batch_per_worker)
     else:
-        data = ClassificationData(num_classes=10, dim=cfg.dim, noise=0.8,
-                                  seed=cfg.seed)
-        model = build_mlp_model(dims=(cfg.dim, 128, 128, 10))
-        reshape = lambda x: x
-        acc_fn = mlp_accuracy
-
-    params = model.init(jax.random.PRNGKey(cfg.seed))
-    opt_cfg = OptConfig(name="sgd", lr=cfg.lr)
-    m_eff = M
+        model = ModelSpec(kind="mlp", dims=(cfg.dim, 128, 128, 10))
+        data = DataSpec(kind="classification", dim=cfg.dim, num_classes=10,
+                        noise=0.8, seed=cfg.seed,
+                        batch_per_worker=cfg.batch_per_worker)
     # Krum-family assumption needs m - q - 2 > 0; paper caps q at 8 for m=20
     q = min(b, M - 3)
-    rob = RobustConfig(rule=rule, b=min(b, (M + 1) // 2 - 1), q=q,
-                       attack=ATTACKS[attack])
-    step = make_train_step(model, robust_cfg=rob, opt_cfg=opt_cfg,
-                           num_workers=m_eff, mesh=None, donate=False)
-    opt_state = init_opt_state(opt_cfg, params)
-    test = data.test_set(1024)
-    if cfg.model == "cnn":
-        pass
+    from repro.optim import OptConfig
+    return ScenarioSpec(
+        name=f"{topology}-{rule}-{attack}-b{b}",
+        topology=topology,
+        model=model,
+        data=data,
+        robust=RobustConfig(rule=rule, b=min(b, (M + 1) // 2 - 1), q=q),
+        attack=ATTACKS[attack],
+        opt=OptConfig(name="sgd", lr=cfg.lr),
+        num_workers=M,
+        steps=cfg.steps,
+        seed=cfg.seed,
+        log_every=cfg.eval_every,
+    )
 
-    key = jax.random.PRNGKey(cfg.seed + 1)
-    curve = []
-    for i in range(cfg.steps):
-        raw = data.batch(i, cfg.batch_per_worker * m_eff)
-        batch = make_worker_batches(
-            {"x": reshape(raw["x"]), "y": raw["y"]}, m_eff)
-        params, opt_state, metrics = step(params, opt_state, batch,
-                                          jax.random.fold_in(key, i))
-        if i % cfg.eval_every == 0 or i == cfg.steps - 1:
-            acc = float(acc_fn(params, test))
-            curve.append((i, acc))
-            if verbose:
-                print(f"  {rule}/{attack} step {i}: acc {acc:.4f}",
-                      flush=True)
+
+def run_experiment(rule: str, attack: str, cfg: Optional[ExpConfig] = None,
+                   *, b: Optional[int] = None, verbose: bool = False) -> dict:
+    """Train under (rule × attack); returns accuracy curve + final/max acc
+    + the ``scenario`` dict that produced the row (spec provenance)."""
+    spec = scenario_for(rule, attack, cfg, b=b)
+    result = experiment.run_experiment(spec, verbose=verbose)
+    curve = result.eval_curve
     accs = [a for _, a in curve]
     return {"rule": rule, "attack": attack, "curve": curve,
-            "final_acc": accs[-1], "max_acc": max(accs)}
+            "final_acc": accs[-1], "max_acc": max(accs),
+            "scenario": spec.to_dict()}

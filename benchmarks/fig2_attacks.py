@@ -21,13 +21,15 @@ def main(full: bool = False, model: str = "mlp",
     # reference: averaging without Byzantine failures
     ref = run_experiment("mean", "none", cfg)
     rows.append({"attack": "none", "rule": "mean_no_byz",
-                 "final_acc": ref["final_acc"], "max_acc": ref["max_acc"]})
+                 "final_acc": ref["final_acc"], "max_acc": ref["max_acc"],
+                 "scenario": ref["scenario"]})
     for attack in registry.available_attacks():
         for rule in RULES:
             r = run_experiment(rule, attack, cfg, b=paper_b(attack))
             rows.append({"attack": attack, "rule": rule,
                          "final_acc": r["final_acc"],
-                         "max_acc": r["max_acc"]})
+                         "max_acc": r["max_acc"],
+                         "scenario": r["scenario"]})
             print(f"fig2 {attack:10s} {rule:10s} final={r['final_acc']:.4f} "
                   f"max={r['max_acc']:.4f}", flush=True)
     os.makedirs(os.path.dirname(out), exist_ok=True)

@@ -25,7 +25,8 @@ def main(full: bool = False, out: str = "results/fig3.csv") -> list:
             r = run_experiment(rule, "bitflip", cfg, b=q)
             rows.append({"panel": "a_bitflip", "rule": rule, "b_or_q": q,
                          "final_acc": r["final_acc"],
-                         "max_acc": r["max_acc"]})
+                         "max_acc": r["max_acc"],
+                         "scenario": r["scenario"]})
             print(f"fig3a q={q} {rule:10s} final={r['final_acc']:.4f}",
                   flush=True)
     # (b) max accuracy under gambler when b varies — every robust rule that
@@ -39,7 +40,8 @@ def main(full: bool = False, out: str = "results/fig3.csv") -> list:
             r = run_experiment(rule, "gambler", cfg, b=b)
             rows.append({"panel": "b_gambler", "rule": rule, "b_or_q": b,
                          "final_acc": r["final_acc"],
-                         "max_acc": r["max_acc"]})
+                         "max_acc": r["max_acc"],
+                         "scenario": r["scenario"]})
             print(f"fig3b b={b} {rule:10s} max={r['max_acc']:.4f}",
                   flush=True)
     os.makedirs(os.path.dirname(out), exist_ok=True)

@@ -19,7 +19,8 @@ def main(full: bool = False, out: str = "results/fig4.csv") -> list:
             r = run_experiment(rule, "none", cfg, b=6)
             rows.append({"batch": bs, "rule": rule,
                          "final_acc": r["final_acc"],
-                         "max_acc": r["max_acc"]})
+                         "max_acc": r["max_acc"],
+                         "scenario": r["scenario"]})
             print(f"fig4 bs={bs:4d} {rule:8s} final={r['final_acc']:.4f}",
                   flush=True)
     os.makedirs(os.path.dirname(out), exist_ok=True)

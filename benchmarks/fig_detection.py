@@ -15,8 +15,15 @@ q rows are Byzantine — those cells report precision/recall.  Dimensional
 attacks (bitflip, gambler) corrupt values at random rows per coordinate, so
 no row-level truth exists; those cells report q̂ only (for bitflip the
 right answer is a DIFFUSE score vector — every row is partially Byzantine —
-so a near-zero q̂ is the honest reading, not a miss).  An attack="none"
+so a near-zero q̂ is the honest reading, not a miss).  Adaptive
+(step-aware) attacks like slowburn likewise report q̂ only: inside their
+trust-building phase the honest reading is q̂ = 0 — evading early
+detection is the attack's design, not a detector miss.  An attack="none"
 control row per rule measures false positives on clean runs.
+
+Each row records the ``ScenarioSpec`` describing its cell
+(``row["scenario"]``), matching the provenance column of the training
+benchmarks.
 """
 from __future__ import annotations
 
@@ -26,6 +33,7 @@ import numpy as np
 from repro.core import AttackConfig, RobustConfig, aggregate_matrix, registry
 from repro.defense import (DefenseConfig, estimate_q, init_reputation,
                            suspicion_of, update_reputation)
+from repro.experiment import DataSpec, ModelSpec, ScenarioSpec
 
 M = 20          # paper: 20 workers
 DIM = 128
@@ -38,13 +46,21 @@ def run_cell(rule: str, attack: str, q: int, *, m: int = M, d: int = DIM,
     b = min(max(q, 2), (m + 1) // 2 - 1)
     cfg = RobustConfig(rule=rule, b=b, q=min(max(q, 1), m - 3),
                        attack=AttackConfig(name=attack, num_byzantine=q))
+    spec = ScenarioSpec(
+        name=f"detection-{rule}-{attack}-q{q}",
+        model=ModelSpec(kind="mlp", dims=(d, 128, 128, 10)),
+        data=DataSpec(kind="classification", dim=d, seed=seed),
+        robust=RobustConfig(rule=rule, b=b, q=min(max(q, 1), m - 3)),
+        attack=AttackConfig(name=attack, num_byzantine=q),
+        defense=DefenseConfig(), num_workers=m, steps=steps, seed=seed)
     dcfg = DefenseConfig()
     state = init_reputation(m)
     q_hat = 0
     for t in range(steps):
         k1, k2 = jax.random.split(jax.random.fold_in(key, t))
         u = 1.0 + 0.1 * jax.random.normal(k1, (m, d))   # benign: unit mean
-        _, scores = aggregate_matrix(u, cfg, key=k2, with_scores=True)
+        _, scores = aggregate_matrix(u, cfg, key=k2, with_scores=True,
+                                     step=t)
         state = update_reputation(state, scores, dcfg)
         q_hat = int(estimate_q(scores, min_gap=dcfg.detector_min_gap))
     susp = np.asarray(suspicion_of(state))
@@ -52,7 +68,8 @@ def run_cell(rule: str, attack: str, q: int, *, m: int = M, d: int = DIM,
     kind = (registry.get_attack_spec(attack).kind
             if attack != "none" else "control")
     row = {"attack": attack, "kind": kind, "rule": rule, "q": q,
-           "q_hat": q_hat, "precision": None, "recall": None}
+           "q_hat": q_hat, "precision": None, "recall": None,
+           "scenario": spec.to_dict()}
     if attack == "none":
         row["precision"] = 1.0 if not pred else 0.0    # false-positive check
     elif kind == "classic":

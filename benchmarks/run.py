@@ -3,6 +3,14 @@ Prints ``name,us_per_call,derived`` CSV lines AND persists each
 benchmark's rows as a machine-readable ``BENCH_<name>.json`` perf/quality
 summary at the repo root (the artifact CI and trajectory tooling consume).
 
+Scenario provenance: rows carry a ``"scenario"`` key with the
+``repro.experiment.ScenarioSpec`` dict describing their cell.  For the
+training benchmarks (fig2/fig3/fig4) the spec *produced* the row —
+``ScenarioSpec.from_dict(row["scenario"]) `` + ``run_experiment`` re-runs
+it exactly.  For detection (synthetic score loop) and survival
+(closed-form probability) the spec is contextual: it names the rule ×
+attack × q cell the row quantifies, not a training run behind the number.
+
   python -m benchmarks.run [--full] [--only fig2,detection,...]
 """
 from __future__ import annotations

@@ -11,7 +11,9 @@ server holding d_s parameters, each value corrupted i.i.d. w.p. p):
       row i is Byzantine if ANY of its d_s values is hit:
       P(row) = 1 − (1−p)^{d_s};   P(crash/iter) = P(#rows > q)
 
-CSV: results/survival.csv.
+CSV: results/survival.csv.  Each row records the training
+``ScenarioSpec`` whose crash probability it quantifies (the gambler cell
+at that corruption probability, ``row["scenario"]``).
 """
 from __future__ import annotations
 
@@ -22,6 +24,17 @@ import os
 import numpy as np
 
 M = 20
+
+
+def _scenario_row(b: int, p: float) -> dict:
+    """The gambler training scenario this survival row quantifies."""
+    import dataclasses
+    from benchmarks.common import scenario_for, ExpConfig
+    spec = scenario_for("trmean", "gambler", ExpConfig(b=b), b=b)
+    spec = dataclasses.replace(
+        spec, name=f"survival-trmean-gambler-b{b}-p{p}",
+        attack=dataclasses.replace(spec.attack, gambler_prob=p))
+    return spec.to_dict()
 
 
 def _binom_pmf(k, n, p):
@@ -69,7 +82,8 @@ def main(out: str = "results/survival.csv"):
                 rows.append({"d_server": d_s, "p": p, "b_or_q": b,
                              "P_crash_dimensional": cd,
                              "P_crash_classic": cc,
-                             "mc_dimensional": mc_d, "mc_classic": mc_c})
+                             "mc_dimensional": mc_d, "mc_classic": mc_c,
+                             "scenario": _scenario_row(b, p)})
                 print(f"survival d_s={d_s:6d} p={p:.4f} b=q={b}: "
                       f"dimensional {cd:.3e} (mc {mc_d:.3f})  "
                       f"classic {cc:.3e} (mc {mc_c:.3f})", flush=True)

@@ -1,75 +1,67 @@
-"""End-to-end driver: train a ~100M-parameter transformer for a few hundred
-steps with Byzantine workers, comparing Mean vs Phocas aggregation.
+"""End-to-end driver: train a transformer from the model zoo with Byzantine
+workers, comparing Mean vs a robust rule — two ScenarioSpecs that differ in
+one field, both executed by the single ``run_experiment`` entry point.
 
-This is the full production path — model zoo config, data pipeline, robust
-train step, optimizer, checkpointing — at a scale a laptop CPU can run.
-
-  PYTHONPATH=src python examples/byzantine_train.py [--steps 300] [--small]
+  PYTHONPATH=src python examples/byzantine_train.py [--steps 300] \
+      [--rule phocas] [--topology sync_ps|async_ps|streaming]
 """
 import argparse
 import dataclasses
 
-import jax
-
-from repro.configs import get_arch
 from repro.core import AttackConfig, RobustConfig, registry
-from repro.data import TokenStream
-from repro.models import build_model
+from repro.experiment import (DataSpec, ModelSpec, ScenarioSpec,
+                              run_experiment)
 from repro.optim import OptConfig
-from repro.train import Trainer, TrainerConfig
-
-
-def run(rule: str, attack: AttackConfig, cfg, steps: int, m: int = 8,
-        backend: str = "auto"):
-    model = build_model(cfg)
-    # backend="auto" resolves per-rule through the registry: rules that
-    # declare a Pallas kernel use it off-CPU, everything else stays on XLA.
-    robust = RobustConfig(rule=rule, b=2, q=2, backend=backend, attack=attack)
-    opt = OptConfig(name="sgd", lr=0.5)
-    tcfg = TrainerConfig(num_workers=m, steps=steps,
-                         log_every=max(steps // 10, 1))
-    ds = TokenStream(vocab_size=cfg.vocab_size, seq_len=128,
-                     global_batch=2 * m)
-    trainer = Trainer(model, ds.batch, tcfg, robust, opt)
-    hist = trainer.run(verbose=True)
-    return hist[0]["loss"], hist[-1]["loss"]
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--steps", type=int, default=300)
-    ap.add_argument("--small", action="store_true",
-                    help="2-layer reduced model (fast CI)")
     ap.add_argument("--rule", default="phocas",
                     choices=registry.available_rules(),
                     help="robust rule to compare against plain Mean")
+    # async_ps is omitted: its history records carry no loss (token models
+    # have no eval either), so the loss comparison below would be empty —
+    # see tests/test_experiment.py for the async path.
+    ap.add_argument("--topology", default="sync_ps",
+                    choices=("sync_ps", "streaming"))
     ap.add_argument("--backend", default="auto",
                     choices=("auto", "pallas", "xla"))
     args = ap.parse_args()
 
-    base = get_arch("gemma2-2b-reduced")
-    if args.small:
-        cfg = base
-    else:
-        # ~100M params: widen the reduced config
-        cfg = dataclasses.replace(
-            base, name="gemma2-100m", num_layers=8, d_model=768,
-            num_heads=12, num_kv_heads=4, head_dim=64, d_ff=2048,
-            vocab_size=32768, window_pattern=(256, None))
-    n = sum(x.size for x in jax.tree.leaves(
-        build_model(cfg).init(jax.random.PRNGKey(0))))
-    print(f"model: {cfg.name} ({n:,} params)\n")
+    m = 8
+    # The streaming scan cannot host colluding adversaries (it never sees
+    # all workers at once); spec validation would reject omniscient there
+    # with an actionable error, so pick a per-worker attack for it.
+    attack = ("gaussian" if args.topology == "streaming" else "omniscient")
+    base = ScenarioSpec(
+        name=f"byz-{args.rule}",
+        topology=args.topology,
+        model=ModelSpec(kind="arch", arch="gemma2-2b-reduced"),
+        data=DataSpec(kind="tokens", seq_len=128, batch_per_worker=2),
+        robust=RobustConfig(rule=args.rule, b=2, q=2,
+                            backend=args.backend),
+        attack=AttackConfig(name=attack, num_byzantine=2),
+        opt=OptConfig(name="sgd", lr=0.5),
+        num_workers=m, steps=args.steps,
+        log_every=max(args.steps // 10, 1))
 
-    attack = AttackConfig(name="omniscient", num_byzantine=2)
-    rule = args.rule
-    print(f"=== {rule} under omniscient attack (2/8 workers Byzantine) ===")
-    first_p, last_p = run(rule, attack, cfg, args.steps,
-                          backend=args.backend)
+    print(f"=== {args.rule} under {attack} attack "
+          f"(2/{m} workers Byzantine, topology={args.topology}) ===")
+    robust = run_experiment(base, verbose=True)
+
     print("\n=== Mean under the same attack ===")
-    first_m, last_m = run("mean", attack, cfg, max(args.steps // 4, 20))
+    mean_spec = dataclasses.replace(
+        base, name="byz-mean", robust=RobustConfig(rule="mean", b=0, q=2),
+        steps=max(args.steps // 4, 20))
+    mean = run_experiment(mean_spec, verbose=True)
 
-    print(f"\n{rule}:  loss {first_p:.3f} -> {last_p:.3f}  (training works)")
-    print(f"Mean:    loss {first_m:.3f} -> {last_m:.3f}  (diverges/stuck)")
+    r0, r1 = robust.history[0], robust.history[-1]
+    m0, m1 = mean.history[0], mean.history[-1]
+    print(f"\n{args.rule}:  loss {r0['loss']:.3f} -> {r1['loss']:.3f}  "
+          "(training works)")
+    print(f"Mean:    loss {m0['loss']:.3f} -> {m1['loss']:.3f}  "
+          "(diverges/stuck)")
 
 
 if __name__ == "__main__":

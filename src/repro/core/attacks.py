@@ -39,6 +39,9 @@ class AttackConfig:
     gambler_prob: float = 0.0005       # paper: 0.05%
     gambler_scale: float = -1e20
     innerprod_scale: float = 2.0       # Fall-of-Empires epsilon
+    slowburn_trigger: int = 50         # step at which the colluders strike
+    slowburn_scale: float = 100.0      # strike magnitude (innerprod-style)
+    slowburn_mimic_std: float = 0.01   # trust-building mimicry noise
 
 
 # ---------------------------------------------------------------------------
@@ -94,6 +97,44 @@ def innerprod_attack(key: jax.Array, u: jax.Array, q: int,
     correct_mean = jnp.mean(u[q:], axis=0, keepdims=True)
     byz = -scale * correct_mean
     return u.at[:q].set(jnp.broadcast_to(byz, (q, u.shape[1])))
+
+
+# ---------------------------------------------------------------------------
+# Adaptive (step-aware) attacks
+# ---------------------------------------------------------------------------
+
+def slowburn_attack(key: jax.Array, u: jax.Array, q: int,
+                    step: Optional[jax.Array],
+                    trigger: int = 50, scale: float = 100.0,
+                    mimic_std: float = 0.01) -> jax.Array:
+    """Reputation-EMA slow burn (ROADMAP item c): a colluding adversary that
+    *targets the defense's trust state* rather than the aggregation rule.
+
+    Phase 1 (``step < trigger``): the q colluders submit near-perfect copies
+    of the benign mean (+ tiny mimicry noise), making them the *most*
+    conforming workers in the matrix — suspicion scores stay at the floor
+    and the reputation EMA saturates at full trust.
+
+    Phase 2 (``step >= trigger``): a coordinated inner-product strike,
+    ``-scale * mean(correct)`` on every colluding row at once.  Because the
+    strike lands with maximal banked reputation, the EMA + hysteresis gate
+    needs several steps to eject the colluders — the window the attack
+    exploits.  The rule-level trim (Phocas/Trmean) still bounds per-step
+    damage; what the attack measures is the *defense loop's* reaction lag.
+
+    ``step=None`` (matrix-level tools with no step context) assumes the
+    worst case: the strike phase.
+    """
+    m, d = u.shape
+    correct_mean = jnp.mean(u[q:], axis=0, keepdims=True)
+    mimic = (jnp.broadcast_to(correct_mean, (q, d))
+             + mimic_std * jax.random.normal(key, (q, d), u.dtype))
+    strike = jnp.broadcast_to(-scale * correct_mean, (q, d))
+    if step is None:
+        byz = strike
+    else:
+        byz = jnp.where(jnp.asarray(step) >= trigger, strike, mimic)
+    return u.at[:q].set(byz)
 
 
 # ---------------------------------------------------------------------------
@@ -180,6 +221,13 @@ def _innerprod(cfg: AttackConfig) -> Attack:
                                          cfg.innerprod_scale)
 
 
+@register_attack("slowburn", kind="adaptive", paper_q=6, step_aware=True)
+def _slowburn(cfg: AttackConfig) -> Attack:
+    return lambda k, u, step=None: slowburn_attack(
+        k, u, cfg.num_byzantine, step, cfg.slowburn_trigger,
+        cfg.slowburn_scale, cfg.slowburn_mimic_std)
+
+
 @register_attack("bitflip", kind="dimensional", paper_q=1)
 def _bitflip(cfg: AttackConfig) -> Attack:
     return lambda k, u: bitflip_attack(k, u, cfg.num_byzantine,
@@ -193,15 +241,23 @@ def _gambler(cfg: AttackConfig) -> Attack:
 
 
 def make_attack(cfg: AttackConfig) -> Optional[Attack]:
-    """Build a ``(key, u) -> u_tilde`` closure from the config (None = clean).
+    """Build a ``(key, u, step=None) -> u_tilde`` closure from the config
+    (None = clean).
 
     Resolves through the attack registry: any ``@register_attack`` plugin
-    is reachable by its registered name.
+    is reachable by its registered name.  Every returned closure accepts an
+    optional trailing ``step`` so the engine can thread the training step
+    uniformly; step-oblivious attacks ignore it, step-aware ones
+    (``AttackSpec.step_aware``) use it to schedule their phases.
     """
     name = cfg.name.lower()
     if name in ("none", ""):
         return None
-    return get_attack_spec(name).factory(cfg)
+    spec = get_attack_spec(name)
+    fn = spec.factory(cfg)
+    if spec.step_aware:
+        return fn
+    return lambda key, u, step=None: fn(key, u)
 
 
 # Deprecated: static snapshots kept for backwards compatibility — the source

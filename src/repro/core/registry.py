@@ -305,22 +305,35 @@ def robust_rules() -> Tuple[str, ...]:
 # Attack registry
 # ---------------------------------------------------------------------------
 
+ATTACK_KINDS = ("classic", "dimensional", "adaptive")
+
+
 @dataclasses.dataclass(frozen=True)
 class AttackSpec:
-    """A registered attack: factory + the metadata the benchmarks read."""
+    """A registered attack: factory + the metadata the benchmarks read.
+
+    ``step_aware`` marks attacks whose behavior depends on the training
+    step (the adaptive trust-building adversaries): their closures take a
+    third ``step`` argument, threaded from the train step's optimizer
+    state.  Called without a step they assume the worst case (post-trigger
+    strike phase), so matrix-level tools stay usable.
+    """
     name: str
     factory: Callable[..., Attack]        # AttackConfig -> Attack closure
-    kind: str                             # classic | dimensional
+    kind: str                             # classic | dimensional | adaptive
     paper_q: int = 0                      # Byzantine count in the paper's runs
+    step_aware: bool = False              # closure reads the training step
 
 
 _ATTACKS: Dict[str, AttackSpec] = {}
 
 
-def register_attack(name: str, *, kind: str, paper_q: int = 0):
+def register_attack(name: str, *, kind: str, paper_q: int = 0,
+                    step_aware: bool = False):
     """Decorator for attack factories ``AttackConfig -> (key, u) -> u~``."""
-    if kind not in ("classic", "dimensional"):
-        raise ValueError(f"attack kind must be classic|dimensional, got {kind!r}")
+    if kind not in ATTACK_KINDS:
+        raise ValueError(
+            f"attack kind must be one of {ATTACK_KINDS}, got {kind!r}")
 
     def deco(factory):
         key = name.lower()
@@ -328,7 +341,7 @@ def register_attack(name: str, *, kind: str, paper_q: int = 0):
         if prev is not None and prev.factory is not factory:
             raise ValueError(f"attack {key!r} already registered")
         _ATTACKS[key] = AttackSpec(name=key, factory=factory, kind=kind,
-                                   paper_q=paper_q)
+                                   paper_q=paper_q, step_aware=step_aware)
         return factory
 
     return deco

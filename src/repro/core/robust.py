@@ -97,12 +97,15 @@ class RobustConfig:
 def aggregate_matrix(u: jax.Array, cfg: RobustConfig,
                      key: Optional[jax.Array] = None, *,
                      active: Optional[jax.Array] = None,
-                     with_scores: bool = False):
+                     with_scores: bool = False,
+                     step: Optional[jax.Array] = None):
     """Aggregate an (m, d) worker matrix, optionally injecting the attack.
 
     ``active`` applies the reputation gate (after the attack — the defense
     never sees pre-corruption data); ``with_scores=True`` returns
-    ``(agg, scores)`` via the rule's ``reduce_with_scores`` hook.
+    ``(agg, scores)`` via the rule's ``reduce_with_scores`` hook.  ``step``
+    is the training step, forwarded to step-aware (adaptive) attacks;
+    without it those attacks assume their worst-case phase.
 
     Scoring always observes the RAW submissions while the aggregate uses
     the gated matrix: if ejected rows were also replaced for scoring, an
@@ -114,7 +117,7 @@ def aggregate_matrix(u: jax.Array, cfg: RobustConfig,
     if attack is not None:
         if key is None:
             raise ValueError("attack configured but no PRNG key supplied")
-        uf = attack(key, uf)
+        uf = attack(key, uf, step)
     rule = cfg.rule_obj()
     if with_scores:
         # One fused hook: raw-submission scores + gated aggregate.  The
@@ -129,7 +132,8 @@ def aggregate_matrix(u: jax.Array, cfg: RobustConfig,
 def aggregate_stacked_tree(stacked, cfg: RobustConfig,
                            key: Optional[jax.Array] = None, *,
                            active: Optional[jax.Array] = None,
-                           with_scores: bool = False):
+                           with_scores: bool = False,
+                           step: Optional[jax.Array] = None):
     """Aggregate a pytree whose leaves are stacked (m, *leaf_shape) arrays.
 
     Flattens to a single (m, D) matrix so vector-wise rules (krum) see full
@@ -143,7 +147,7 @@ def aggregate_stacked_tree(stacked, cfg: RobustConfig,
     mat = jax.vmap(lambda i: ravel_pytree(
         jax.tree.map(lambda x: x[i], stacked))[0])(jnp.arange(m))
     out = aggregate_matrix(mat, cfg, key, active=active,
-                           with_scores=with_scores)
+                           with_scores=with_scores, step=step)
     if with_scores:
         agg, scores = out
         return unravel(agg.astype(flat0.dtype)), scores
@@ -159,7 +163,8 @@ def robust_aggregate_dist(grad_tree, cfg: RobustConfig,
                           model_axes: Sequence[str] = (),
                           key: Optional[jax.Array] = None,
                           active: Optional[jax.Array] = None,
-                          with_scores: bool = False):
+                          with_scores: bool = False,
+                          step: Optional[jax.Array] = None):
     """Aggregate per-worker gradient pytrees inside ``shard_map``.
 
     Args:
@@ -171,6 +176,8 @@ def robust_aggregate_dist(grad_tree, cfg: RobustConfig,
       model_axes: tensor-parallel axes (needed only by vector-wise rules'
         partial-statistic psums).
       key: per-step PRNG key (replicated), required when an attack is set.
+      step: replicated training-step scalar, forwarded to step-aware
+        (adaptive) attacks; None = worst-case phase.
       active: replicated (m,) reputation mask — ejected workers' rows are
         gated (``gate_matrix``) before the rule runs.
       with_scores: also return the rule's per-worker suspicion scores,
@@ -206,7 +213,7 @@ def robust_aggregate_dist(grad_tree, cfg: RobustConfig,
     if cfg.layout == "replicated":
         mat = _gather_workers(flat, worker_axes)          # (m, D)
         if attack is not None:
-            mat = attack(key, mat)
+            mat = attack(key, mat, step)
         agg, scores = _reduce(mat, tuple(model_axes))      # (D,)
     elif cfg.layout == "sharded":
         mat = _a2a_scatter(flat, worker_axes)             # (m, D/m)
@@ -215,7 +222,7 @@ def robust_aggregate_dist(grad_tree, cfg: RobustConfig,
             # the paper's §5.1.4 multi-server partitioning.
             key = jax.random.fold_in(key, _worker_slice_index(worker_axes)) \
                 if key is not None else None
-            mat = attack(key, mat)
+            mat = attack(key, mat, step)
         agg_slice, scores = _reduce(
             mat, worker_axes + tuple(model_axes))         # (D/m,)
         agg = _gather_slices(agg_slice, worker_axes)      # (D,)

@@ -40,6 +40,7 @@ from __future__ import annotations
 
 import functools
 import math
+import warnings
 from typing import List, Optional, Sequence, Tuple
 
 import jax
@@ -50,6 +51,28 @@ import jax.numpy as jnp
 # far beyond the paper's experiments (m <= 100).
 _NETWORK_MAX_M = 128
 _PAIRWISE_MAX_M = 64
+
+# One-time-per-process warning guard for the stable_ranks fallback cliff
+# (ROADMAP selection follow-up c): above _PAIRWISE_MAX_M the exact pairwise
+# path would cost O(m^2) compares, so we route through the documented
+# double-argsort fallback — semantically identical, but it re-pays the two
+# XLA sorts the fused path exists to avoid.  Warn once so large-fleet users
+# know the perf model changed instead of silently losing the speedup.
+_RANK_FALLBACK_WARNED = False
+
+
+def _warn_rank_fallback(m: int) -> None:
+    global _RANK_FALLBACK_WARNED
+    if _RANK_FALLBACK_WARNED:
+        return
+    _RANK_FALLBACK_WARNED = True
+    warnings.warn(
+        f"stable_ranks: m={m} exceeds _PAIRWISE_MAX_M={_PAIRWISE_MAX_M}; "
+        "falling back to the double-argsort rank path (two O(m log m) XLA "
+        "sorts per call — bit-identical results, but the fused O(m^2) "
+        "pairwise speedup no longer applies at this fleet size). "
+        "This warning is emitted once per process.",
+        RuntimeWarning, stacklevel=3)
 
 
 def _as_f32(u: jax.Array) -> jax.Array:
@@ -139,6 +162,7 @@ def stable_ranks(keys: Sequence[jax.Array]) -> List[jax.Array]:
     XLA sorts."""
     m = len(keys)
     if m > _PAIRWISE_MAX_M:
+        _warn_rank_fallback(m)
         stacked = jnp.stack(keys)
         r = jnp.argsort(jnp.argsort(stacked, axis=0), axis=0)
         return [r[i] for i in range(m)]

@@ -39,6 +39,14 @@ class DefenseConfig:
     warmup_steps: int = 2             # no ejection before this many updates
     detector_min_gap: float = 0.2     # q-hat bimodality gap threshold
     telemetry_path: Optional[str] = None  # JSONL sink (None = off)
+    # Adaptive rule parameters (ROADMAP item a): when True the experiment
+    # step feeds the detector's online q̂ back into the rule — an
+    # under-provisioned b/q is raised to q̂ (host-side re-jit) once the
+    # detector reports q̂ > b for ``adapt_patience`` consecutive steps.
+    # Opt-in: changing b changes the rule's static selection windows, so
+    # each adaptation recompiles the train step.
+    adapt_b: bool = False
+    adapt_patience: int = 2           # consecutive q̂ > b steps before adapting
 
     def __post_init__(self):
         if not 0.0 < self.reputation_decay < 1.0:
@@ -47,6 +55,9 @@ class DefenseConfig:
         if self.readmit_above < self.eject_below:
             raise ValueError("readmit_above must be >= eject_below "
                              "(hysteresis band)")
+        if self.adapt_patience < 1:
+            raise ValueError("adapt_patience must be >= 1, got "
+                             f"{self.adapt_patience}")
 
 
 def init_reputation(m: int) -> dict:

@@ -1,0 +1,20 @@
+"""``repro.experiment`` — declarative scenarios + pluggable topologies
+(DESIGN.md §9).
+
+One frozen, JSON-round-trippable :class:`ScenarioSpec` describes an entire
+experiment (model × data × optimizer × rule × attack × defense × mesh ×
+topology), one :func:`run_experiment` entry point executes it, and
+topologies are registry plugins exactly like rules and attacks — adding a
+scenario axis is a one-file change, and every consumer (launch CLI,
+benchmark grids, examples, CI smoke matrix) enumerates the same registry.
+"""
+from repro.experiment.runner import (  # noqa: F401
+    ExperimentResult, Plan, plan_from_parts, resolve, run_experiment,
+)
+from repro.experiment.spec import (  # noqa: F401
+    DataSpec, ModelSpec, ScenarioSpec, SpecError,
+)
+from repro.experiment.topology import (  # noqa: F401
+    Topology, available_topologies, get_topology, make_topology,
+    register_topology,
+)

@@ -1,0 +1,214 @@
+"""Scenario resolution + the single ``run_experiment(spec)`` entry point.
+
+``resolve(spec)`` turns declarative data into the runtime bundle every
+topology consumes (:class:`Plan`): the model, the batch function, the eval
+closure, the device mesh, the effective ``RobustConfig`` (attack axis
+injected), and the resolved optimizer (lr schedules bound by name).  The
+spec is validated against the registries first, so every failure mode the
+three legacy drivers surfaced mid-run — streaming-incapable rule, defense
+on a score-less rule, bad mesh shape — fails here with an actionable
+message before anything is jitted.
+
+``run_experiment`` is the one training entry point: every path (launch
+CLI, benchmarks, examples, scenario-smoke CI, the deprecated shims) goes
+spec -> resolve -> topology plugin -> :class:`ExperimentResult`.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Optional
+
+from repro.core.robust import RobustConfig
+from repro.experiment.spec import ScenarioSpec, parse_mesh
+from repro.experiment.topology import make_topology
+from repro.optim.optimizers import OptConfig
+
+
+@dataclasses.dataclass
+class Plan:
+    """A resolved scenario: everything a topology needs to run the loop.
+
+    Built by :func:`resolve` from a validated spec, or directly by the
+    deprecated driver shims (``Trainer``/``run_async_training``/
+    ``run_streaming_training``) from their legacy arguments — which is what
+    makes the shims thin delegations instead of parallel code paths.
+    """
+    spec: Optional[ScenarioSpec]
+    topology: str
+    topology_params: Dict[str, Any]
+    model: Any
+    batch_fn: Callable[[int], dict]
+    eval_fn: Optional[Callable]
+    robust_cfg: RobustConfig          # effective (attack axis injected)
+    opt_cfg: OptConfig                # effective (schedule bound)
+    defense_cfg: Any                  # DefenseConfig | None
+    mesh: Any                         # jax Mesh | None
+    num_workers: int
+    steps: int
+    seed: int
+    record_every: int                 # history/eval cadence
+    checkpoint_path: Optional[str]
+    checkpoint_every: int
+    telemetry_path: Optional[str]
+    verbose: bool = False
+
+
+@dataclasses.dataclass
+class ExperimentResult:
+    """What a topology returns: the trajectory plus the final state.
+
+    ``history`` records land every ``record_every`` steps (and on the last
+    step); their keys depend on the topology and on whether defense/eval
+    are configured — see DESIGN.md §9.  ``robust_cfg`` is the *final*
+    effective config (it differs from the spec's when ``defense.adapt_b``
+    re-tuned b/q mid-run).
+    """
+    spec: Optional[ScenarioSpec]
+    history: List[dict]
+    params: Any
+    opt_state: Any = None
+    defense_state: Optional[dict] = None
+    final_metrics: Dict[str, Any] = dataclasses.field(default_factory=dict)
+    robust_cfg: Optional[RobustConfig] = None
+    wall_time: float = 0.0
+
+    @property
+    def final_loss(self) -> Optional[float]:
+        for rec in reversed(self.history):
+            if "loss" in rec:
+                return rec["loss"]
+        return None
+
+    @property
+    def final_eval(self) -> Optional[float]:
+        for rec in reversed(self.history):
+            if "eval" in rec:
+                return rec["eval"]
+        return None
+
+    @property
+    def eval_curve(self) -> List[tuple]:
+        return [(r["step"], r["eval"]) for r in self.history if "eval" in r]
+
+
+def resolve(spec: ScenarioSpec, *, verbose: bool = False) -> Plan:
+    """Validate ``spec`` and build the runtime bundle (model, data, mesh)."""
+    spec.validate()
+    m = spec.num_workers
+
+    model, batch_fn, eval_fn = _build_model_and_data(spec)
+
+    mesh = None
+    if spec.mesh:
+        from repro.launch.mesh import make_host_mesh
+        d, mm = parse_mesh(spec.mesh)
+        mesh = make_host_mesh(data=d, model=mm)
+
+    opt_cfg = spec.opt
+    if spec.schedule:
+        from repro.optim import schedules
+        params = dict(spec.schedule_params)
+        if spec.schedule in ("cosine_decay", "warmup_cosine"):
+            params.setdefault("total_steps", spec.steps)
+        fn = getattr(schedules, spec.schedule)
+        opt_cfg = dataclasses.replace(
+            opt_cfg, lr=fn(float(spec.opt.lr), **params))
+
+    telemetry = spec.telemetry_path or (
+        spec.defense.telemetry_path if spec.defense is not None else None)
+
+    return Plan(
+        spec=spec,
+        topology=spec.topology,
+        topology_params=dict(spec.topology_params),
+        model=model,
+        batch_fn=batch_fn,
+        eval_fn=eval_fn,
+        robust_cfg=spec.effective_robust(),
+        opt_cfg=opt_cfg,
+        defense_cfg=spec.defense,
+        mesh=mesh,
+        num_workers=m,
+        steps=spec.steps,
+        seed=spec.seed,
+        record_every=spec.record_every(),
+        checkpoint_path=spec.checkpoint_path or None,
+        checkpoint_every=spec.checkpoint_every,
+        telemetry_path=telemetry or None,
+        verbose=verbose,
+    )
+
+
+def run_experiment(spec: ScenarioSpec, *,
+                   verbose: bool = False) -> ExperimentResult:
+    """THE training entry point: validate + resolve ``spec``, dispatch to
+    its topology plugin, return the :class:`ExperimentResult`."""
+    plan = resolve(spec, verbose=verbose)
+    return make_topology(plan.topology).run(plan)
+
+
+def _build_model_and_data(spec: ScenarioSpec):
+    """(model, batch_fn, eval_fn) for the spec's model × data cell."""
+    m, ds = spec.model, spec.data
+    global_batch = spec.num_workers * ds.batch_per_worker
+
+    if m.kind == "arch":
+        from repro.configs import get_arch
+        from repro.models import build_model
+        cfg = get_arch(m.arch)
+        model = build_model(cfg, remat=m.remat)
+        from repro.data.pipeline import TokenStream
+        stream = TokenStream(vocab_size=cfg.vocab_size, seq_len=ds.seq_len,
+                             global_batch=global_batch, seed=ds.seed)
+        return model, stream.batch, None
+
+    from repro.data.pipeline import ClassificationData
+    data = ClassificationData(num_classes=ds.num_classes, dim=ds.dim,
+                              noise=ds.noise, seed=ds.seed)
+
+    if m.kind == "cnn":
+        from repro.models.cnn import build_cnn_model, cnn_topk_accuracy
+        size, ch = m.cnn_size, m.cnn_channels
+        model = build_cnn_model(in_ch=ch, size=size)
+        reshape = lambda x: x.reshape(-1, size, size, ch)  # noqa: E731
+        test = data.test_set(1024)
+        test = {"x": reshape(test["x"]), "y": test["y"]}
+
+        def batch_fn(step: int) -> dict:
+            raw = data.batch(step, global_batch)
+            return {"x": reshape(raw["x"]), "y": raw["y"]}
+
+        return model, batch_fn, lambda p: cnn_topk_accuracy(p, test, k=3)
+
+    from repro.models.mlp import build_mlp_model, mlp_accuracy
+    dims = m.dims or (ds.dim, 128, 128, ds.num_classes)
+    model = build_mlp_model(dims=dims)
+    test = data.test_set(1024)
+    return (model, lambda step: data.batch(step, global_batch),
+            lambda p: mlp_accuracy(p, test))
+
+
+def plan_from_parts(*, model, batch_fn, robust_cfg, opt_cfg,
+                    num_workers: int, steps: int, seed: int = 0,
+                    topology: str = "sync_ps",
+                    topology_params: Optional[dict] = None,
+                    eval_fn=None, defense_cfg=None, mesh=None,
+                    record_every: int = 10,
+                    checkpoint_path: Optional[str] = None,
+                    checkpoint_every: int = 0,
+                    telemetry_path: Optional[str] = None,
+                    verbose: bool = False) -> Plan:
+    """Build a :class:`Plan` from already-constructed runtime objects.
+
+    The deprecated driver shims use this: they hold a live model/batch_fn
+    rather than a declarative spec, so they skip spec resolution and enter
+    the shared topology loops directly (``spec=None`` on the result)."""
+    return Plan(
+        spec=None, topology=topology,
+        topology_params=dict(topology_params or {}),
+        model=model, batch_fn=batch_fn, eval_fn=eval_fn,
+        robust_cfg=robust_cfg, opt_cfg=opt_cfg, defense_cfg=defense_cfg,
+        mesh=mesh, num_workers=num_workers, steps=steps, seed=seed,
+        record_every=max(record_every, 1),
+        checkpoint_path=checkpoint_path, checkpoint_every=checkpoint_every,
+        telemetry_path=telemetry_path, verbose=verbose)

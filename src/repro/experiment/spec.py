@@ -1,0 +1,347 @@
+"""`ScenarioSpec` — one frozen, JSON-round-trippable description of an
+entire experiment (DESIGN.md §9).
+
+The paper's claims are about *scenarios*: rule × attack × q × batch-size
+grids (Figs. 2-4), and the follow-up papers add more attack and rule axes.
+Before this module the repo had no first-class scenario object — sync,
+async, and streaming training were three divergent driver APIs and every
+benchmark/example/CLI re-wired model × data × rule × attack × defense ×
+mesh by hand.  ``ScenarioSpec`` is that wiring as *data*:
+
+  spec = ScenarioSpec(
+      topology="sync_ps",
+      model=ModelSpec(kind="mlp"),
+      data=DataSpec(kind="classification", dim=64),
+      robust=RobustConfig(rule="phocas", b=6),
+      attack=AttackConfig(name="gaussian", num_byzantine=6),
+      num_workers=20, steps=100)
+  result = run_experiment(spec)             # repro.experiment.runner
+
+Design rules:
+
+* every field is a plain value or one of the existing serializable configs
+  (``RobustConfig``/``AttackConfig``/``DefenseConfig``/``OptConfig``), so a
+  spec round-trips **bit-identically** through ``to_json``/``from_json``
+  (tuples come back as tuples, nested configs as their dataclasses);
+* ``validate()`` checks the spec against the rule/attack/topology registry
+  *metadata* (``supports_streaming``, ``emits_scores``, ``uses_b``,
+  ``step_aware``, mesh support, ...) at spec-build time, so a bad cell in a
+  1000-cell sweep fails with an actionable message before any model is
+  built or any step jitted;
+* the attack is a first-class axis: ``spec.attack`` lives NEXT TO
+  ``spec.robust`` (grid sweeps replace one field), and resolution injects
+  it into the effective ``RobustConfig``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Any, Dict, Optional, Tuple
+
+from repro.core.attacks import AttackConfig
+from repro.core.robust import RobustConfig
+from repro.defense.reputation import DefenseConfig
+from repro.optim.optimizers import OptConfig
+
+SCHEDULES = ("", "constant", "cosine_decay", "warmup_cosine")
+
+
+class SpecError(ValueError):
+    """A scenario failed validation (actionable message, raised pre-run)."""
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelSpec:
+    """What to train: the paper's MLP/CNN experiment models, or any
+    architecture from the ``repro.configs`` zoo (``kind="arch"``)."""
+    kind: str = "mlp"             # mlp | cnn | arch
+    arch: str = ""                # configs.get_arch id (kind="arch")
+    dims: Tuple[int, ...] = ()    # MLP layer dims; () = (dim, 128, 128, C)
+    cnn_size: int = 16            # CNN input is (size, size, channels)
+    cnn_channels: int = 3
+    remat: str = "none"           # activation remat policy (arch models)
+
+
+@dataclasses.dataclass(frozen=True)
+class DataSpec:
+    """What to train on: the Gaussian-mixture classification substrate of
+    the paper's experiments, or the bigram TokenStream for the arch zoo."""
+    kind: str = "classification"  # classification | tokens
+    dim: int = 64                 # feature dim (classification)
+    num_classes: int = 10
+    noise: float = 0.8
+    seq_len: int = 64             # tokens
+    batch_per_worker: int = 20    # global batch = num_workers * this
+    seed: int = 0
+
+
+@dataclasses.dataclass(frozen=True)
+class ScenarioSpec:
+    """One experiment, as declarative data.  See the module docstring."""
+    name: str = "scenario"
+    topology: str = "sync_ps"     # any @register_topology plugin
+    topology_params: Dict[str, Any] = dataclasses.field(default_factory=dict)
+    model: ModelSpec = dataclasses.field(default_factory=ModelSpec)
+    data: DataSpec = dataclasses.field(default_factory=DataSpec)
+    robust: RobustConfig = dataclasses.field(default_factory=RobustConfig)
+    attack: AttackConfig = dataclasses.field(default_factory=AttackConfig)
+    defense: Optional[DefenseConfig] = None
+    opt: OptConfig = dataclasses.field(default_factory=OptConfig)
+    schedule: str = ""            # lr schedule plugin (repro.optim.schedules)
+    schedule_params: Dict[str, Any] = dataclasses.field(default_factory=dict)
+    num_workers: int = 20
+    steps: int = 100
+    seed: int = 0
+    mesh: str = ""                # "DxM" device mesh (sync_ps only)
+    log_every: int = 0            # history/eval cadence; 0 = steps//20
+    checkpoint_path: str = ""     # "" = checkpointing off
+    checkpoint_every: int = 0
+    telemetry_path: str = ""      # JSONL sink ("" = off)
+
+    # -- resolution helpers ------------------------------------------------
+
+    def effective_attack(self) -> AttackConfig:
+        """The scenario's attack axis (``attack`` wins; a legacy attack
+        embedded in ``robust`` is honored when ``attack`` is clean)."""
+        if self.attack.name not in ("none", ""):
+            return self.attack
+        return self.robust.attack
+
+    def effective_robust(self) -> RobustConfig:
+        """``robust`` with the scenario's attack axis injected."""
+        return dataclasses.replace(self.robust, attack=self.effective_attack())
+
+    def record_every(self) -> int:
+        return self.log_every if self.log_every > 0 else max(
+            self.steps // 20, 1)
+
+    # -- JSON round-trip ---------------------------------------------------
+
+    def to_dict(self) -> dict:
+        return _encode(self)
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "ScenarioSpec":
+        return _decode_dataclass(cls, d)
+
+    def to_json(self) -> str:
+        """Canonical JSON (sorted keys, 2-space indent) — two specs are
+        equal iff their ``to_json`` strings are byte-identical."""
+        return json.dumps(self.to_dict(), indent=2, sort_keys=True)
+
+    @classmethod
+    def from_json(cls, s: str) -> "ScenarioSpec":
+        return cls.from_dict(json.loads(s))
+
+    def save(self, path: str) -> None:
+        with open(path, "w") as f:
+            f.write(self.to_json() + "\n")
+
+    @classmethod
+    def load(cls, path: str) -> "ScenarioSpec":
+        with open(path) as f:
+            return cls.from_json(f.read())
+
+    # -- validation --------------------------------------------------------
+
+    def validate(self) -> "ScenarioSpec":
+        """Check this spec against the rule/attack/topology registries.
+
+        Raises :class:`SpecError` with an actionable message (what is wrong
+        AND what the valid choices are) — the point is to fail a bad sweep
+        cell at spec-build time, not 40 minutes into the run.  Returns
+        ``self`` so call sites can chain ``spec.validate()``.
+        """
+        from repro.core import registry
+        from repro.experiment.topology import make_topology
+
+        if self.steps < 1:
+            raise SpecError(f"steps must be >= 1, got {self.steps}")
+        m = self.num_workers
+        if m < 2:
+            raise SpecError(f"num_workers must be >= 2, got {m}")
+        if self.data.batch_per_worker < 1:
+            raise SpecError("data.batch_per_worker must be >= 1, got "
+                            f"{self.data.batch_per_worker}")
+
+        # model/data consistency
+        if self.model.kind not in ("mlp", "cnn", "arch"):
+            raise SpecError(f"model.kind {self.model.kind!r} unknown; "
+                            "valid: mlp | cnn | arch")
+        if self.data.kind not in ("classification", "tokens"):
+            raise SpecError(f"data.kind {self.data.kind!r} unknown; "
+                            "valid: classification | tokens")
+        if self.model.kind == "arch":
+            if not self.model.arch:
+                raise SpecError("model.kind='arch' needs model.arch "
+                                "(see repro.configs.list_archs())")
+            if self.data.kind != "tokens":
+                raise SpecError("arch models train on data.kind='tokens', "
+                                f"got {self.data.kind!r}")
+            from repro.configs import get_arch
+            try:
+                get_arch(self.model.arch)
+            except KeyError as e:
+                raise SpecError(str(e)) from None
+        else:
+            if self.data.kind != "classification":
+                raise SpecError(f"model.kind={self.model.kind!r} trains on "
+                                "data.kind='classification', got "
+                                f"{self.data.kind!r}")
+        if self.model.kind == "cnn":
+            want = self.model.cnn_size ** 2 * self.model.cnn_channels
+            if self.data.dim != want:
+                raise SpecError(
+                    f"cnn model needs data.dim == cnn_size^2 * cnn_channels "
+                    f"= {want}, got {self.data.dim}")
+        if self.model.kind == "mlp" and self.model.dims:
+            if self.model.dims[0] != self.data.dim:
+                raise SpecError(f"model.dims[0]={self.model.dims[0]} must "
+                                f"equal data.dim={self.data.dim}")
+            if self.model.dims[-1] != self.data.num_classes:
+                raise SpecError(
+                    f"model.dims[-1]={self.model.dims[-1]} must equal "
+                    f"data.num_classes={self.data.num_classes}")
+
+        # rule + parameters against registry metadata
+        try:
+            rule_cls = registry.get_rule(self.robust.rule)
+            registry.resolve_backend(rule_cls, self.robust.backend)
+        except ValueError as e:
+            raise SpecError(str(e)) from None
+        bmax = (m + 1) // 2 - 1
+        if rule_cls.uses_b and not 0 <= self.robust.b <= bmax:
+            raise SpecError(
+                f"rule {self.robust.rule!r} needs 0 <= b <= (m+1)//2-1 = "
+                f"{bmax} for m={m} workers, got b={self.robust.b}")
+        if rule_cls.uses_q and not 0 <= self.robust.q <= m - 3:
+            raise SpecError(
+                f"rule {self.robust.rule!r} needs 0 <= q <= m-3 = {m - 3} "
+                f"(Krum selection needs m-q-2 > 0), got q={self.robust.q}")
+
+        # attack axis
+        if (self.attack.name not in ("none", "")
+                and self.robust.attack.name not in ("none", "")):
+            raise SpecError(
+                "both spec.attack and spec.robust.attack are set "
+                f"({self.attack.name!r} vs {self.robust.attack.name!r}); "
+                "the scenario's attack axis is spec.attack — leave "
+                "robust.attack at its default")
+        atk = self.effective_attack()
+        if atk.name not in ("none", ""):
+            try:
+                registry.get_attack_spec(atk.name)
+            except ValueError as e:
+                raise SpecError(str(e)) from None
+
+        # defense
+        if self.defense is not None:
+            if self.robust.rule not in registry.score_rules():
+                raise SpecError(
+                    f"defense needs a score-emitting rule (emits_scores); "
+                    f"{self.robust.rule!r} is not one of "
+                    f"{registry.score_rules()}")
+            if self.defense.adapt_b and not (rule_cls.uses_b
+                                             or rule_cls.uses_q):
+                raise SpecError(
+                    f"defense.adapt_b tunes the rule's b/q, but rule "
+                    f"{self.robust.rule!r} consumes neither")
+
+        # optimizer / schedule
+        if not isinstance(self.opt.lr, (int, float)):
+            raise SpecError("spec.opt.lr must be a number; express "
+                            "schedules via spec.schedule + schedule_params "
+                            f"(valid: {SCHEDULES[1:]})")
+        if self.schedule not in SCHEDULES:
+            raise SpecError(f"unknown schedule {self.schedule!r}; "
+                            f"valid: {SCHEDULES[1:]}")
+
+        # mesh shape (topology support is the topology's check)
+        if self.mesh:
+            d, _ = parse_mesh(self.mesh)
+            if d != m:
+                raise SpecError(
+                    f"mesh={self.mesh!r} has a data axis of {d} but "
+                    f"num_workers={m}; the mesh data axis plays the worker "
+                    "role and the two must agree")
+
+        # topology existence + its own metadata checks
+        try:
+            topo = make_topology(self.topology)
+        except ValueError as e:
+            raise SpecError(str(e)) from None
+        topo.validate_spec(self)
+        return self
+
+
+def parse_mesh(mesh: str) -> Tuple[int, int]:
+    """Parse a ``"DxM"`` mesh string into (data, model) axis sizes."""
+    try:
+        d, mm = (int(x) for x in mesh.split("x"))
+        if d < 1 or mm < 1:
+            raise ValueError
+    except ValueError:
+        raise SpecError(f"mesh must look like '4x2' (data x model), "
+                        f"got {mesh!r}") from None
+    return d, mm
+
+
+# ---------------------------------------------------------------------------
+# JSON codec: nested dataclasses <-> plain dicts, tuples <-> lists
+# ---------------------------------------------------------------------------
+
+# Field-name -> dataclass type for every nested config in the spec tree
+# (names are unique across the tree, so one flat table suffices; note
+# RobustConfig's own ``attack`` field is covered by the same entry).
+_NESTED_FIELDS = {
+    "model": ModelSpec,
+    "data": DataSpec,
+    "robust": RobustConfig,
+    "attack": AttackConfig,
+    "defense": DefenseConfig,
+    "opt": OptConfig,
+}
+
+
+def _encode(v):
+    if dataclasses.is_dataclass(v) and not isinstance(v, type):
+        return {f.name: _encode(getattr(v, f.name))
+                for f in dataclasses.fields(v)}
+    if isinstance(v, (list, tuple)):
+        return [_encode(x) for x in v]
+    if isinstance(v, dict):
+        return {str(k): _encode(x) for k, x in v.items()}
+    if v is None or isinstance(v, (bool, int, float, str)):
+        return v
+    raise SpecError(
+        f"value {v!r} of type {type(v).__name__} is not JSON-serializable; "
+        "scenario specs hold plain data only (callables like lr schedules "
+        "are expressed by name via spec.schedule)")
+
+
+def _decode_value(v):
+    if isinstance(v, list):
+        return tuple(_decode_value(x) for x in v)
+    return v
+
+
+def _decode_dataclass(cls, d):
+    if d is None:
+        return None
+    if not isinstance(d, dict):
+        raise SpecError(f"expected a JSON object for {cls.__name__}, "
+                        f"got {type(d).__name__}")
+    valid = {f.name for f in dataclasses.fields(cls)}
+    unknown = sorted(set(d) - valid)
+    if unknown:
+        raise SpecError(f"unknown field(s) {unknown} for {cls.__name__}; "
+                        f"valid fields: {sorted(valid)}")
+    kwargs = {}
+    for name, v in d.items():
+        if name in _NESTED_FIELDS and isinstance(v, (dict, type(None))):
+            kwargs[name] = _decode_dataclass(_NESTED_FIELDS[name], v)
+        elif name in ("topology_params", "schedule_params"):
+            kwargs[name] = dict(v) if v else {}
+        else:
+            kwargs[name] = _decode_value(v)
+    return cls(**kwargs)

@@ -1,0 +1,284 @@
+"""Builtin topology plugins: the three training-loop shapes the repo grew
+as divergent drivers, now behind one ``Topology.run(plan)`` contract.
+
+* ``sync_ps``   — the paper's synchronous parameter server (one SPMD
+  program; DESIGN.md §2), with optional device mesh, defense loop, and the
+  adaptive-b experiment step (ROADMAP item a).
+* ``async_ps``  — buffered-async PS with geometric staleness (the paper's
+  stated future work; ``train/async_sgd.py`` is the jitted engine).
+* ``streaming`` — memory-bounded sequential scan (``train/streaming.py``);
+  O((2b+1)·|θ|) instead of O(m·|θ|), collusion attacks excluded by
+  metadata.
+
+Each topology drives the existing jitted step builders — the engines stay
+where they were; what moved here is the *loop*: batching, telemetry,
+history records, checkpointing, adaptation.  The deprecated driver shims
+(``Trainer``, ``run_async_training``, ``run_streaming_training``) call
+these same loops via ``plan_from_parts``, so legacy and spec-built runs
+share one code path step-for-step.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import registry
+from repro.data.pipeline import make_worker_batches
+from repro.defense.telemetry import TelemetryWriter
+from repro.experiment.runner import ExperimentResult, Plan
+from repro.experiment.topology import Topology, register_topology
+from repro.optim.optimizers import init_opt_state
+from repro.train.streaming import STREAMING_ATTACKS
+
+
+@register_topology
+class SyncPS(Topology):
+    """The paper's synchronous PS loop (port of ``Trainer.run``)."""
+
+    name = "sync_ps"
+    supports_mesh = True
+    supports_defense = True
+    supports_adapt_b = True
+
+    def run(self, plan: Plan, init_state=None) -> ExperimentResult:
+        from repro.train.step import make_train_step, shard_params
+
+        m = plan.num_workers
+        robust_cfg = plan.robust_cfg
+        dcfg = plan.defense_cfg
+        rule_meta = registry.get_rule(robust_cfg.rule)
+
+        def build_step(rc):
+            return make_train_step(
+                plan.model, robust_cfg=rc, opt_cfg=plan.opt_cfg,
+                num_workers=m, mesh=plan.mesh, donate=False,
+                defense_cfg=dcfg)
+
+        step_fn = build_step(robust_cfg)
+        if init_state is not None:
+            params, opt_state, defense_state = init_state
+        else:
+            params = plan.model.init(jax.random.PRNGKey(plan.seed))
+            if plan.mesh is not None:
+                params = shard_params(params, plan.mesh)
+            opt_state = init_opt_state(plan.opt_cfg, params)
+            defense_state = None
+            if dcfg is not None:
+                from repro.defense.reputation import init_reputation
+                defense_state = init_reputation(m)
+
+        # adapt_b bookkeeping (ROADMAP item a): the detector's online q̂
+        # feeds back into the rule's b/q.  Changing b changes the rule's
+        # static selection windows, so each adaptation re-jits the step —
+        # a host-side decision, made only after q̂ > current for
+        # ``adapt_patience`` consecutive steps (noise hysteresis).
+        adapt = dcfg is not None and dcfg.adapt_b
+        bmax = (m + 1) // 2 - 1
+        pending = 0
+
+        key = jax.random.PRNGKey(plan.seed + 1)
+        history: list = []
+        metrics: dict = {}
+        t0 = time.time()
+        with TelemetryWriter(plan.telemetry_path) as tel:
+            for step in range(plan.steps):
+                batch = make_worker_batches(plan.batch_fn(step), m)
+                key, sk = jax.random.split(key)
+                if defense_state is not None:
+                    (params, opt_state, defense_state, metrics) = step_fn(
+                        params, opt_state, batch, sk, defense_state)
+                    tel.log("train", step,
+                            loss=metrics["loss"],
+                            grad_norm=metrics["grad_norm"],
+                            suspicion=metrics["suspicion"],
+                            reputation=metrics["reputation"],
+                            active=metrics["active"],
+                            q_hat=metrics["q_hat"])
+                else:
+                    params, opt_state, metrics = step_fn(
+                        params, opt_state, batch, sk)
+
+                if step % plan.record_every == 0 or step == plan.steps - 1:
+                    rec = {"step": step, "loss": float(metrics["loss"]),
+                           "grad_norm": float(metrics["grad_norm"]),
+                           "wall": time.time() - t0}
+                    if "q_hat" in metrics:
+                        rec["q_hat"] = int(metrics["q_hat"])
+                        rec["n_active"] = int(jnp.sum(metrics["active"]))
+                    if plan.eval_fn is not None:
+                        rec["eval"] = float(plan.eval_fn(params))
+                    history.append(rec)
+                    if plan.verbose:
+                        msg = (f"step {step:5d}  loss {rec['loss']:.4f}  "
+                               f"gnorm {rec['grad_norm']:.3e}")
+                        if "q_hat" in rec:
+                            msg += (f"  qhat {rec['q_hat']}  "
+                                    f"active {rec['n_active']}")
+                        if "eval" in rec:
+                            msg += f"  eval {rec['eval']:.4f}"
+                        print(msg, flush=True)
+
+                if (plan.checkpoint_path and plan.checkpoint_every and step
+                        and step % plan.checkpoint_every == 0):
+                    from repro.checkpoint.io import save_checkpoint
+                    tree = {"params": params, "opt": opt_state}
+                    if defense_state is not None:
+                        tree["defense"] = defense_state
+                    save_checkpoint(plan.checkpoint_path, tree, step=step)
+
+                if adapt:
+                    q_hat = int(metrics["q_hat"])
+                    current = (robust_cfg.b if rule_meta.uses_b
+                               else robust_cfg.q)
+                    pending = pending + 1 if q_hat > current else 0
+                    if pending >= dcfg.adapt_patience:
+                        new_b = (min(q_hat, bmax) if rule_meta.uses_b
+                                 else robust_cfg.b)
+                        new_q = (min(max(q_hat, robust_cfg.q), m - 3)
+                                 if rule_meta.uses_q else robust_cfg.q)
+                        pending = 0
+                        # q̂ beyond the cap leaves b/q saturated — nothing
+                        # to re-jit, and refiring every patience window
+                        # would recompile an unchanged step forever.
+                        if (new_b != robust_cfg.b
+                                or new_q != robust_cfg.q):
+                            robust_cfg = dataclasses.replace(
+                                robust_cfg, b=new_b, q=new_q)
+                            step_fn = build_step(robust_cfg)
+                            history.append(
+                                {"step": step, "adapted_b": new_b,
+                                 "adapted_q": new_q, "q_hat": q_hat})
+                            tel.log("adapt", step, b=new_b, q=new_q,
+                                    q_hat=q_hat)
+                            if plan.verbose:
+                                print(f"step {step:5d}  [adapt] "
+                                      f"q_hat={q_hat} -> b={new_b} "
+                                      f"q={new_q} (re-jit)", flush=True)
+
+        return ExperimentResult(
+            spec=plan.spec, history=history, params=params,
+            opt_state=opt_state, defense_state=defense_state,
+            final_metrics=_scalarize(metrics), robust_cfg=robust_cfg,
+            wall_time=time.time() - t0)
+
+
+@register_topology
+class AsyncPS(Topology):
+    """Buffered-async PS (port of ``run_async_training``'s loop)."""
+
+    name = "async_ps"
+    supports_defense = True
+    param_names = ("staleness", "update_clip")
+
+    def run(self, plan: Plan, init_state=None) -> ExperimentResult:
+        from repro.train.async_sgd import AsyncConfig, make_async_train_step
+
+        m = plan.num_workers
+        acfg = AsyncConfig(
+            num_workers=m,
+            staleness=int(plan.topology_params.get("staleness", 4)),
+            update_clip=float(plan.topology_params.get("update_clip", 10.0)),
+            seed=plan.seed)
+        init_fn, step_fn = make_async_train_step(
+            plan.model, robust_cfg=plan.robust_cfg, opt_cfg=plan.opt_cfg,
+            acfg=acfg, defense_cfg=plan.defense_cfg)
+        key = jax.random.PRNGKey(plan.seed)
+        state = init_fn(key) if init_state is None else init_state
+        history: list = []
+        metrics: dict = {}
+        t0 = time.time()
+        with TelemetryWriter(plan.telemetry_path) as tel:
+            for i in range(plan.steps):
+                batch = make_worker_batches(plan.batch_fn(i), m)
+                state, metrics = step_fn(state, batch,
+                                         jax.random.fold_in(key, i))
+                if plan.defense_cfg is not None:
+                    tel.log("async", i,
+                            staleness_frac=metrics["staleness_frac"],
+                            suspicion=metrics["suspicion"],
+                            reputation=metrics["reputation"],
+                            active=metrics["active"],
+                            q_hat=metrics["q_hat"])
+                if i % plan.record_every == 0 or i == plan.steps - 1:
+                    rec = {"step": i, "staleness_frac":
+                           float(metrics["staleness_frac"])}
+                    if "q_hat" in metrics:
+                        rec["q_hat"] = int(metrics["q_hat"])
+                    if plan.eval_fn is not None:
+                        rec["eval"] = float(plan.eval_fn(state["params"]))
+                    history.append(rec)
+                    if plan.verbose and "eval" in rec:
+                        print(f"step {i:5d}  eval {rec['eval']:.4f}",
+                              flush=True)
+
+        return ExperimentResult(
+            spec=plan.spec, history=history, params=state["params"],
+            opt_state=state["opt"], defense_state=state.get("defense"),
+            final_metrics=_scalarize(metrics), robust_cfg=plan.robust_cfg,
+            wall_time=time.time() - t0)
+
+
+@register_topology
+class Streaming(Topology):
+    """Memory-bounded scan (port of ``run_streaming_training``'s loop)."""
+
+    name = "streaming"
+    attack_allowlist = STREAMING_ATTACKS
+    requires_streaming_rule = True
+
+    def run(self, plan: Plan, init_state=None) -> ExperimentResult:
+        from repro.train.streaming import make_streaming_train_step
+
+        m = plan.num_workers
+        step_fn = make_streaming_train_step(
+            plan.model, robust_cfg=plan.robust_cfg, opt_cfg=plan.opt_cfg,
+            num_workers=m)
+        key = jax.random.PRNGKey(plan.seed)
+        if init_state is not None:
+            params, opt_state, _ = init_state
+        else:
+            params = plan.model.init(key)
+            opt_state = init_opt_state(plan.opt_cfg, params)
+        history: list = []
+        metrics: dict = {}
+        t0 = time.time()
+        with TelemetryWriter(plan.telemetry_path) as tel:
+            for i in range(plan.steps):
+                batch = make_worker_batches(plan.batch_fn(i), m)
+                params, opt_state, metrics = step_fn(
+                    params, opt_state, batch, jax.random.fold_in(key, i))
+                extra = ({"suspicion": metrics["suspicion"]}
+                         if "suspicion" in metrics else {})
+                tel.log("streaming", i, loss=metrics["loss"], **extra)
+                if i % plan.record_every == 0 or i == plan.steps - 1:
+                    rec = {"step": i, "loss": float(metrics["loss"])}
+                    if plan.eval_fn is not None:
+                        rec["eval"] = float(plan.eval_fn(params))
+                    history.append(rec)
+                    if plan.verbose:
+                        msg = f"step {i:5d}  loss {rec['loss']:.4f}"
+                        if "eval" in rec:
+                            msg += f"  eval {rec['eval']:.4f}"
+                        print(msg, flush=True)
+
+        return ExperimentResult(
+            spec=plan.spec, history=history, params=params,
+            opt_state=opt_state, final_metrics=_scalarize(metrics),
+            robust_cfg=plan.robust_cfg, wall_time=time.time() - t0)
+
+
+def _scalarize(metrics: dict) -> dict:
+    """Final-step metrics with device scalars pulled to floats (per-worker
+    vectors and other non-scalars are dropped — they live in telemetry)."""
+    out = {}
+    for k, v in metrics.items():
+        try:
+            arr = jnp.asarray(v)
+        except TypeError:
+            continue
+        if arr.ndim == 0:
+            out[k] = float(arr)
+    return out

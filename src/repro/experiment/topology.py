@@ -1,0 +1,130 @@
+"""Topology plugin registry — how a scenario *executes* (DESIGN.md §9).
+
+A topology is the training-loop shape: the paper's synchronous parameter
+server, the buffered-async PS of its stated future work, the memory-bounded
+streaming scan, or anything a plugin adds (hierarchical PS, gossip, ...).
+Mirrors ``core/registry.py``: subclass :class:`Topology`, set the metadata
+classvars, implement ``run``, decorate with :func:`register_topology`, and
+the whole stack — ``run_experiment``, the launch CLI, benchmark sweeps, the
+scenario-smoke CI matrix — enumerates the new topology automatically.
+
+The metadata classvars drive *generic* spec validation
+(:meth:`Topology.validate_spec`): which scenario features the loop supports
+(device mesh, defense state, adaptive b), which attacks it can simulate
+(streaming cannot host colluding adversaries), and which ``topology_params``
+keys it consumes.  Validation runs at spec-build time with actionable
+errors, replacing the mid-run ValueErrors the three legacy drivers threw.
+"""
+from __future__ import annotations
+
+from typing import ClassVar, Dict, Optional, Tuple, Type
+
+from repro.experiment.spec import ScenarioSpec, SpecError
+
+
+class Topology:
+    """Base class for registered training topologies.
+
+    ``run(plan, init_state=None)`` executes the resolved scenario
+    (:class:`repro.experiment.runner.Plan`) and returns an
+    :class:`repro.experiment.runner.ExperimentResult`.  ``init_state``
+    optionally injects pre-built ``(params, opt_state, defense_state)`` —
+    the hook the deprecated ``Trainer`` shim uses to keep its restore/
+    checkpoint surface working on top of the new path.
+    """
+
+    # --- metadata (override in subclasses) ---
+    name: ClassVar[str]
+    supports_mesh: ClassVar[bool] = False      # spec.mesh usable
+    supports_defense: ClassVar[bool] = False   # spec.defense usable
+    supports_adapt_b: ClassVar[bool] = False   # defense.adapt_b usable
+    param_names: ClassVar[Tuple[str, ...]] = ()  # valid topology_params keys
+    # None = every registered attack; otherwise the simulatable subset.
+    attack_allowlist: ClassVar[Optional[Tuple[str, ...]]] = None
+    requires_streaming_rule: ClassVar[bool] = False
+
+    # --- generic metadata validation (subclasses may extend) ---
+
+    def validate_spec(self, spec: ScenarioSpec) -> None:
+        from repro.core import registry
+
+        if spec.mesh and not self.supports_mesh:
+            raise SpecError(
+                f"topology {self.name!r} does not support a device mesh; "
+                f"drop mesh={spec.mesh!r} or use one of "
+                f"{[t for t in available_topologies() if get_topology(t).supports_mesh]}")
+        if spec.defense is not None and not self.supports_defense:
+            raise SpecError(
+                f"topology {self.name!r} does not support the defense loop; "
+                f"drop spec.defense or use one of "
+                f"{[t for t in available_topologies() if get_topology(t).supports_defense]}")
+        if (spec.defense is not None and spec.defense.adapt_b
+                and not self.supports_adapt_b):
+            raise SpecError(
+                f"defense.adapt_b (online b/q re-tuning) is only available "
+                f"on topologies "
+                f"{[t for t in available_topologies() if get_topology(t).supports_adapt_b]}, "
+                f"not {self.name!r}")
+        unknown = sorted(set(spec.topology_params) - set(self.param_names))
+        if unknown:
+            raise SpecError(
+                f"unknown topology_params {unknown} for topology "
+                f"{self.name!r}; valid keys: {sorted(self.param_names)}")
+        atk = spec.effective_attack().name.lower()
+        if (atk not in ("none", "") and self.attack_allowlist is not None
+                and atk not in self.attack_allowlist):
+            raise SpecError(
+                f"attack {atk!r} cannot be simulated on topology "
+                f"{self.name!r} (supported: {self.attack_allowlist})")
+        if self.requires_streaming_rule:
+            if not registry.get_rule(spec.robust.rule).supports_streaming:
+                raise SpecError(
+                    f"topology {self.name!r} needs a streaming-capable rule "
+                    f"(supports_streaming); {spec.robust.rule!r} is not one "
+                    f"of {registry.streaming_rules()}")
+
+    # --- execution (override) ---
+
+    def run(self, plan, init_state=None):
+        raise NotImplementedError
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+_TOPOLOGIES: Dict[str, Type[Topology]] = {}
+
+
+def register_topology(cls: Type[Topology]) -> Type[Topology]:
+    """Class decorator: make ``cls`` reachable by name everywhere."""
+    name = cls.name.lower()
+    prev = _TOPOLOGIES.get(name)
+    if prev is not None and prev is not cls:
+        raise ValueError(f"topology {name!r} already registered by "
+                         f"{prev.__module__}.{prev.__qualname__}")
+    _TOPOLOGIES[name] = cls
+    return cls
+
+
+def _ensure_builtins() -> None:
+    # Deferred: the builtin topologies import this module for the decorator.
+    import repro.experiment.topologies  # noqa: F401
+
+
+def available_topologies() -> Tuple[str, ...]:
+    _ensure_builtins()
+    return tuple(sorted(_TOPOLOGIES))
+
+
+def get_topology(name: str) -> Type[Topology]:
+    _ensure_builtins()
+    key = name.lower()
+    if key not in _TOPOLOGIES:
+        raise ValueError(f"unknown topology {name!r}; "
+                         f"have {sorted(_TOPOLOGIES)}")
+    return _TOPOLOGIES[key]
+
+
+def make_topology(name: str) -> Topology:
+    return get_topology(name)()

@@ -1,11 +1,17 @@
-"""Training launcher: run Byzantine-resilient training for any --arch on the
-local device set (real hardware) or demo scale.
+"""Training launcher: a thin ``ScenarioSpec`` builder over
+``repro.experiment.run_experiment`` — flags in, spec out, one entry point
+for every topology (no topology-specific branching lives here).
 
   python -m repro.launch.train --arch gemma2-2b-reduced --steps 100 \
-      --rule phocas --b 2 --attack gaussian --q 2 [--mesh 4x2]
+      --rule phocas --b 2 --attack gaussian --q 2 [--mesh 4x2] \
+      [--topology sync_ps|async_ps|streaming]
 
-On a real TPU slice, --mesh data×model builds the mesh over jax.devices();
-the same flags drive the production 16×16 / 2×16×16 meshes.
+Scenarios are first-class files:
+
+  # run a checked-in scenario (the CI smoke matrix does exactly this)
+  python -m repro.launch.train --scenario examples/scenarios/sync_gaussian.json
+  # write the spec the flags describe, without running it
+  python -m repro.launch.train --arch ... --dump-scenario my_run.json
 """
 from __future__ import annotations
 
@@ -13,21 +19,89 @@ import argparse
 
 import jax
 
-from repro.configs import get_arch
 from repro.core import AttackConfig, RobustConfig, registry
-from repro.data import TokenStream
-from repro.models import build_model
+from repro.experiment import (ScenarioSpec, DataSpec, ModelSpec, SpecError,
+                              available_topologies, run_experiment)
 from repro.optim import OptConfig
-from repro.train import Trainer, TrainerConfig
+
+
+def _parse_topology_params(items) -> dict:
+    out = {}
+    for item in items or ():
+        if "=" not in item:
+            raise SpecError(f"--topology-param needs key=value, got {item!r}")
+        k, v = item.split("=", 1)
+        try:
+            out[k] = int(v)
+        except ValueError:
+            try:
+                out[k] = float(v)
+            except ValueError:
+                out[k] = v
+    return out
+
+
+def build_spec(args) -> ScenarioSpec:
+    """Map CLI flags onto a ScenarioSpec (the only thing this CLI builds)."""
+    workers = args.workers
+    if args.mesh:
+        from repro.experiment.spec import parse_mesh
+        d, _ = parse_mesh(args.mesh)
+        if workers != d:
+            print(f"[train] overriding --workers to mesh data size {d}")
+            workers = d
+    if args.global_batch % workers:
+        raise SpecError(f"--global-batch {args.global_batch} not divisible "
+                        f"by workers={workers}")
+    defense = None
+    if args.defense:
+        from repro.defense import DefenseConfig
+        defense = DefenseConfig(reputation_decay=args.reputation_decay,
+                                adapt_b=args.adapt_b,
+                                telemetry_path=args.telemetry or None)
+    return ScenarioSpec(
+        name=f"{args.arch}-{args.rule}-{args.attack}",
+        topology=args.topology,
+        topology_params=_parse_topology_params(args.topology_param),
+        model=ModelSpec(kind="arch", arch=args.arch, remat=args.remat),
+        data=DataSpec(kind="tokens", seq_len=args.seq_len,
+                      batch_per_worker=args.global_batch // workers),
+        robust=RobustConfig(
+            rule=args.rule, b=args.b, q=args.q or args.b,
+            layout=args.layout, multikrum_k=args.multikrum_k,
+            geomedian_iters=args.geomedian_iters, backend=args.backend),
+        attack=AttackConfig(name=args.attack, num_byzantine=args.q),
+        defense=defense,
+        opt=OptConfig(name=args.optimizer, lr=args.lr),
+        num_workers=workers,
+        steps=args.steps,
+        seed=args.seed,
+        mesh=args.mesh,
+        checkpoint_path=args.checkpoint,
+        checkpoint_every=100 if args.checkpoint else 0,
+        telemetry_path=args.telemetry,
+    )
 
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True)
+    ap.add_argument("--scenario", default="",
+                    help="run a ScenarioSpec JSON file (all other spec "
+                         "flags are ignored)")
+    ap.add_argument("--dump-scenario", default="",
+                    help="write the spec the flags describe to this path "
+                         "and exit without running")
+    ap.add_argument("--arch", default="")
+    ap.add_argument("--topology", default="sync_ps",
+                    choices=available_topologies())
+    ap.add_argument("--topology-param", action="append", metavar="K=V",
+                    help="topology plugin parameter (repeatable), e.g. "
+                         "staleness=4 for async_ps")
     ap.add_argument("--steps", type=int, default=200)
     ap.add_argument("--global-batch", type=int, default=40)
     ap.add_argument("--seq-len", type=int, default=64)
     ap.add_argument("--workers", type=int, default=20)
+    ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--rule", default="phocas",
                     choices=registry.available_rules())
     ap.add_argument("--b", type=int, default=2)
@@ -54,60 +128,44 @@ def main():
                     help="enable the repro.defense loop: per-worker "
                          "suspicion scores, EMA reputation with "
                          "ejection/readmission, online q-hat estimation")
+    ap.add_argument("--adapt-b", action="store_true",
+                    help="with --defense: feed the online q-hat back into "
+                         "the rule's b/q (re-jit on adaptation)")
     ap.add_argument("--reputation-decay", type=float, default=0.9,
                     help="EMA decay of the worker reputation state")
     ap.add_argument("--telemetry", default="",
                     help="JSONL path for per-step defense telemetry")
     args = ap.parse_args()
-    if args.defense and args.rule not in registry.score_rules():
-        # the default score hook is uniform zeros — the defense loop would
-        # silently never detect or eject anything
-        ap.error(f"--defense requires a score-emitting rule "
-                 f"(emits_scores=True); {args.rule!r} is not one of "
-                 f"{registry.score_rules()}")
     if args.use_kernels:
         print("[train] --use-kernels is deprecated; use --backend pallas")
         args.backend = "pallas"
 
-    cfg = get_arch(args.arch)
-    model = build_model(cfg, remat=args.remat)
-    mesh = None
-    if args.mesh:
-        from repro.launch.mesh import make_host_mesh
-        d, m = (int(x) for x in args.mesh.split("x"))
-        mesh = make_host_mesh(data=d, model=m)
-        if args.workers != d:
-            print(f"[train] overriding --workers to mesh data size {d}")
-            args.workers = d
+    try:
+        if args.scenario:
+            spec = ScenarioSpec.load(args.scenario).validate()
+        else:
+            if not args.arch:
+                ap.error("--arch is required (or pass --scenario FILE)")
+            spec = build_spec(args).validate()
+        if args.dump_scenario:
+            spec.save(args.dump_scenario)
+            print(f"[train] wrote {args.dump_scenario} "
+                  f"({spec.name}: topology={spec.topology})")
+            return
+    except SpecError as e:
+        ap.error(str(e))
 
-    robust = RobustConfig(
-        rule=args.rule, b=args.b, q=args.q or args.b, layout=args.layout,
-        multikrum_k=args.multikrum_k, geomedian_iters=args.geomedian_iters,
-        backend=args.backend,
-        attack=AttackConfig(name=args.attack, num_byzantine=args.q))
-    opt = OptConfig(name=args.optimizer, lr=args.lr)
-    tcfg = TrainerConfig(num_workers=args.workers, steps=args.steps,
-                         log_every=max(args.steps // 20, 1),
-                         checkpoint_path=args.checkpoint or None,
-                         checkpoint_every=100 if args.checkpoint else 0)
-    defense = None
-    if args.defense:
-        from repro.defense import DefenseConfig
-        defense = DefenseConfig(reputation_decay=args.reputation_decay,
-                                telemetry_path=args.telemetry or None)
-    ds = TokenStream(vocab_size=cfg.vocab_size, seq_len=args.seq_len,
-                     global_batch=args.global_batch)
-    trainer = Trainer(model, ds.batch, tcfg, robust, opt, mesh=mesh,
-                      defense_cfg=defense)
-    print(f"[train] {args.arch}: {sum(x.size for x in jax.tree.leaves(trainer.params)):,} params, "
-          f"rule={args.rule} b={args.b} attack={args.attack} "
-          f"mesh={args.mesh or 'none'} defense={'on' if defense else 'off'}")
-    trainer.run()
-    if defense is not None and trainer.history and \
-            "q_hat" in trainer.history[-1]:
-        last = trainer.history[-1]
+    result = run_experiment(spec, verbose=True)
+    n = sum(x.size for x in jax.tree.leaves(result.params))
+    print(f"[train] {spec.name}: {n:,} params, topology={spec.topology} "
+          f"rule={spec.robust.rule} b={result.robust_cfg.b} "
+          f"attack={spec.effective_attack().name} "
+          f"mesh={spec.mesh or 'none'} "
+          f"defense={'on' if spec.defense else 'off'}")
+    if result.history and "q_hat" in result.history[-1]:
+        last = result.history[-1]
         print(f"[train] defense: q_hat={last['q_hat']} "
-              f"active={last['n_active']}/{args.workers}")
+              f"active={last.get('n_active', '?')}/{spec.num_workers}")
     print("[train] done")
 
 

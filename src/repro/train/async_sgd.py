@@ -91,7 +91,8 @@ def make_async_train_step(model, *, robust_cfg: RobustConfig,
             from repro.defense.reputation import update_reputation
             agg, scores = aggregate_stacked_tree(
                 buffer, robust_cfg, key=k_attack,
-                active=state["defense"]["active"], with_scores=True)
+                active=state["defense"]["active"], with_scores=True,
+                step=state["opt"]["step"])
             defense = update_reputation(state["defense"], scores,
                                         defense_cfg)
             extra_metrics = {
@@ -102,7 +103,8 @@ def make_async_train_step(model, *, robust_cfg: RobustConfig,
                     scores, min_gap=defense_cfg.detector_min_gap),
             }
         else:
-            agg = aggregate_stacked_tree(buffer, robust_cfg, key=k_attack)
+            agg = aggregate_stacked_tree(buffer, robust_cfg, key=k_attack,
+                                         step=state["opt"]["step"])
         # Bounded-update rule: stale gradients make unbounded steps unstable,
         # so the server clips the aggregated update's global norm (standard
         # stale-synchronous stabilization).  This is a trust region, NOT a
@@ -144,33 +146,20 @@ def run_async_training(model, batch_fn: Callable[[int], dict],
                        acfg: AsyncConfig, steps: int,
                        eval_fn: Optional[Callable] = None,
                        defense_cfg=None) -> list:
-    """Driver: returns history of (step, eval) records.  With
-    ``defense_cfg`` the records carry q̂/active counts and every step
-    streams to the configured JSONL telemetry sink."""
-    from repro.data.pipeline import make_worker_batches
-    from repro.defense.telemetry import TelemetryWriter
-    init_state, step = make_async_train_step(
-        model, robust_cfg=robust_cfg, opt_cfg=opt_cfg, acfg=acfg,
-        defense_cfg=defense_cfg)
-    key = jax.random.PRNGKey(acfg.seed)
-    state = init_state(key)
-    hist = []
-    telemetry_path = (defense_cfg.telemetry_path
-                      if defense_cfg is not None else None)
-    with TelemetryWriter(telemetry_path) as tel:
-        for i in range(steps):
-            batch = make_worker_batches(batch_fn(i), acfg.num_workers)
-            state, metrics = step(state, batch, jax.random.fold_in(key, i))
-            if defense_cfg is not None:
-                tel.log("async", i,
-                        staleness_frac=metrics["staleness_frac"],
-                        suspicion=metrics["suspicion"],
-                        reputation=metrics["reputation"],
-                        active=metrics["active"],
-                        q_hat=metrics["q_hat"])
-            if eval_fn is not None and (i % 10 == 0 or i == steps - 1):
-                rec = {"step": i, "eval": float(eval_fn(state["params"]))}
-                if defense_cfg is not None:
-                    rec["q_hat"] = int(metrics["q_hat"])
-                hist.append(rec)
-    return hist
+    """Deprecated driver shim: delegates to the ``async_ps`` topology
+    (``repro.experiment``), which owns the loop this function used to.
+    Returns the result's history records ({"step", "staleness_frac",
+    ["eval"], ["q_hat"]}); new code should build a ``ScenarioSpec`` with
+    ``topology="async_ps"`` and call ``run_experiment``."""
+    from repro.experiment.runner import plan_from_parts
+    from repro.experiment.topology import make_topology
+    plan = plan_from_parts(
+        model=model, batch_fn=batch_fn, robust_cfg=robust_cfg,
+        opt_cfg=opt_cfg, num_workers=acfg.num_workers, steps=steps,
+        seed=acfg.seed, topology="async_ps",
+        topology_params={"staleness": acfg.staleness,
+                         "update_clip": acfg.update_clip},
+        eval_fn=eval_fn, defense_cfg=defense_cfg, record_every=10,
+        telemetry_path=(defense_cfg.telemetry_path
+                        if defense_cfg is not None else None))
+    return make_topology("async_ps").run(plan).history

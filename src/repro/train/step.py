@@ -73,12 +73,15 @@ def make_train_step(model, *, robust_cfg: RobustConfig, opt_cfg: OptConfig,
             return jax.vmap(jax.value_and_grad(worker_loss),
                             in_axes=(None, 0))(params, batch)
 
-    def aggregate(params, grads, key, active, with_scores):
-        """Robust aggregation in either layout; scores come back replicated."""
+    def aggregate(params, grads, key, active, with_scores, train_step):
+        """Robust aggregation in either layout; scores come back replicated.
+        ``train_step`` (the optimizer's step counter) reaches step-aware
+        adaptive attacks through the engine."""
         if mesh is None:
             return aggregate_stacked_tree(grads, robust_cfg, key,
                                           active=active,
-                                          with_scores=with_scores)
+                                          with_scores=with_scores,
+                                          step=train_step)
         pspecs = tree_pspecs(params, mesh)
         stacked_specs = jax.tree.map(
             lambda sp: P(wa, *sp), pspecs,
@@ -86,32 +89,33 @@ def make_train_step(model, *, robust_cfg: RobustConfig, opt_cfg: OptConfig,
 
         out_specs = (pspecs, P()) if with_scores else pspecs
         if active is None:
-            def agg_fn(g, k):
+            def agg_fn(g, k, ts):
                 local = jax.tree.map(lambda x: x[0], g)
                 return robust_aggregate_dist(local, robust_cfg,
                                              worker_axes=wa, model_axes=ma,
-                                             key=k, with_scores=with_scores)
+                                             key=k, with_scores=with_scores,
+                                             step=ts)
 
             return jax.shard_map(agg_fn, mesh=mesh,
-                                 in_specs=(stacked_specs, P()),
+                                 in_specs=(stacked_specs, P(), P()),
                                  out_specs=out_specs,
-                                 check_vma=False)(grads, key)
+                                 check_vma=False)(grads, key, train_step)
 
-        def agg_gated(g, k, act):
+        def agg_gated(g, k, act, ts):
             local = jax.tree.map(lambda x: x[0], g)
             return robust_aggregate_dist(local, robust_cfg,
                                          worker_axes=wa, model_axes=ma,
                                          key=k, active=act,
-                                         with_scores=with_scores)
+                                         with_scores=with_scores, step=ts)
 
         return jax.shard_map(agg_gated, mesh=mesh,
-                             in_specs=(stacked_specs, P(), P()),
+                             in_specs=(stacked_specs, P(), P(), P()),
                              out_specs=out_specs,
-                             check_vma=False)(grads, key, active)
+                             check_vma=False)(grads, key, active, train_step)
 
     def step(params, opt_state, batch, key):
         losses, grads = worker_grads(params, batch)
-        agg = aggregate(params, grads, key, None, False)
+        agg = aggregate(params, grads, key, None, False, opt_state["step"])
         params, opt_state = apply_updates(opt_cfg, params, agg, opt_state)
         metrics = {"loss": jnp.mean(losses),
                    "loss_per_worker": losses,
@@ -122,7 +126,8 @@ def make_train_step(model, *, robust_cfg: RobustConfig, opt_cfg: OptConfig,
         from repro.defense.detector import estimate_q
         from repro.defense.reputation import update_reputation
         losses, grads = worker_grads(params, batch)
-        agg, scores = aggregate(params, grads, key, defense["active"], True)
+        agg, scores = aggregate(params, grads, key, defense["active"], True,
+                                opt_state["step"])
         defense = update_reputation(defense, scores, defense_cfg)
         params, opt_state = apply_updates(opt_cfg, params, agg, opt_state)
         metrics = {"loss": jnp.mean(losses),

@@ -39,6 +39,14 @@ from repro.core.robust import RobustConfig
 from repro.optim.optimizers import OptConfig, apply_updates
 
 
+# Attacks computable one worker at a time (the streaming scan never holds
+# the full worker matrix, so collusion-style adversaries — omniscient,
+# innerprod, slowburn — cannot be simulated here).  Spec validation
+# (repro.experiment) reads this to reject unsupported cells at build time.
+STREAMING_ATTACKS = ("none", "gaussian", "signflip", "zero", "bitflip",
+                     "gambler")
+
+
 def _path_salt(path) -> int:
     """Deterministic 31-bit fold-in salt from a leaf's tree path.
 
@@ -91,8 +99,8 @@ def _worker_attack(cfg: AttackConfig, g, widx, key, center=None):
         return jax.tree_util.tree_unflatten(
             treedef, [leaf(i, x) for i, x in enumerate(leaves)])
     raise ValueError(f"attack {cfg.name!r} not supported in streaming mode "
-                     "(omniscient/innerprod need all worker gradients at "
-                     "once)")
+                     f"(supported: {STREAMING_ATTACKS}; omniscient/innerprod/"
+                     "slowburn need all worker gradients at once)")
 
 
 def _merge_bottom(bot, g):
@@ -216,28 +224,15 @@ def run_streaming_training(model, batch_fn: Callable[[int], dict],
                            seed: int = 0,
                            eval_fn: Optional[Callable] = None,
                            telemetry_path: Optional[str] = None) -> list:
-    """Driver for the streaming mode, with the same structured JSONL
-    telemetry the sync/async paths emit (kind="streaming"; phocas runs
-    include the per-worker suspicion from the second pass)."""
-    from repro.data.pipeline import make_worker_batches
-    from repro.defense.telemetry import TelemetryWriter
-    step = make_streaming_train_step(
-        model, robust_cfg=robust_cfg, opt_cfg=opt_cfg,
-        num_workers=num_workers)
-    key = jax.random.PRNGKey(seed)
-    params = model.init(key)
-    from repro.optim.optimizers import init_opt_state
-    opt_state = init_opt_state(opt_cfg, params)
-    hist = []
-    with TelemetryWriter(telemetry_path) as tel:
-        for i in range(steps):
-            batch = make_worker_batches(batch_fn(i), num_workers)
-            params, opt_state, metrics = step(params, opt_state, batch,
-                                              jax.random.fold_in(key, i))
-            extra = ({"suspicion": metrics["suspicion"]}
-                     if "suspicion" in metrics else {})
-            tel.log("streaming", i, loss=metrics["loss"], **extra)
-            if eval_fn is not None and (i % 10 == 0 or i == steps - 1):
-                hist.append({"step": i, "loss": float(metrics["loss"]),
-                             "eval": float(eval_fn(params))})
-    return hist
+    """Deprecated driver shim: delegates to the ``streaming`` topology
+    (``repro.experiment``), which owns the loop (same JSONL telemetry,
+    kind="streaming").  New code should build a ``ScenarioSpec`` with
+    ``topology="streaming"`` and call ``run_experiment``."""
+    from repro.experiment.runner import plan_from_parts
+    from repro.experiment.topology import make_topology
+    plan = plan_from_parts(
+        model=model, batch_fn=batch_fn, robust_cfg=robust_cfg,
+        opt_cfg=opt_cfg, num_workers=num_workers, steps=steps, seed=seed,
+        topology="streaming", eval_fn=eval_fn, record_every=10,
+        telemetry_path=telemetry_path)
+    return make_topology("streaming").run(plan).history

@@ -1,26 +1,22 @@
-"""Training loop driver: data -> worker batches -> robust step -> metrics,
-with periodic checkpointing.  Used by the examples and the paper-repro
-benchmarks (laptop scale); the same step function scales to the production
-mesh via launch/train.py.
+"""Deprecated sync-PS driver shim.
 
-With a ``repro.defense.DefenseConfig`` the loop closes the detection loop:
-per-step suspicion scores update the EMA reputation state (threaded through
-the jitted step and checkpointed alongside params/opt), ejected workers are
-gated out of the aggregation, and every step's defense metrics stream to
-the structured JSONL telemetry sink."""
+``Trainer`` predates the declarative experiment API; the loop it used to
+own (batching, telemetry, history records, checkpointing) now lives in the
+``sync_ps`` topology plugin (``repro.experiment.topologies.SyncPS``), and
+this class is a thin delegation kept so existing call sites and
+checkpoints keep working.  New code should build a
+``repro.experiment.ScenarioSpec`` and call ``run_experiment`` instead —
+see DESIGN.md §9 for the migration map.
+"""
 from __future__ import annotations
 
 import dataclasses
-import time
 from typing import Callable, Optional
 
 import jax
-import jax.numpy as jnp
 
 from repro.core.robust import RobustConfig
-from repro.data.pipeline import make_worker_batches
 from repro.optim.optimizers import OptConfig
-from repro.train.step import make_train_step
 
 
 @dataclasses.dataclass
@@ -34,6 +30,9 @@ class TrainerConfig:
 
 
 class Trainer:
+    """Deprecated: delegates to the ``sync_ps`` topology — one loop for
+    shim and spec-built runs, so trajectories are identical step-for-step."""
+
     def __init__(self, model, batch_fn: Callable[[int], dict],
                  tcfg: TrainerConfig, robust_cfg: RobustConfig,
                  opt_cfg: OptConfig, mesh=None,
@@ -42,12 +41,11 @@ class Trainer:
         self.model = model
         self.batch_fn = batch_fn
         self.tcfg = tcfg
+        self.robust_cfg = robust_cfg
+        self.opt_cfg = opt_cfg
+        self.mesh = mesh
         self.eval_fn = eval_fn
         self.defense_cfg = defense_cfg
-        self.step_fn = make_train_step(
-            model, robust_cfg=robust_cfg, opt_cfg=opt_cfg,
-            num_workers=tcfg.num_workers, mesh=mesh, donate=False,
-            defense_cfg=defense_cfg)
         key = jax.random.PRNGKey(tcfg.seed)
         self.params = model.init(key)
         if mesh is not None:
@@ -79,53 +77,26 @@ class Trainer:
         return step
 
     def run(self, verbose: bool = True) -> list:
-        from repro.defense.telemetry import TelemetryWriter
-        key = jax.random.PRNGKey(self.tcfg.seed + 1)
-        telemetry_path = (self.defense_cfg.telemetry_path
-                          if self.defense_cfg is not None else None)
-        t0 = time.time()
-        with TelemetryWriter(telemetry_path) as tel:
-            for step in range(self.tcfg.steps):
-                batch = make_worker_batches(self.batch_fn(step),
-                                            self.tcfg.num_workers)
-                key, sk = jax.random.split(key)
-                if self.defense_state is not None:
-                    (self.params, self.opt_state, self.defense_state,
-                     metrics) = self.step_fn(self.params, self.opt_state,
-                                             batch, sk, self.defense_state)
-                    tel.log("train", step,
-                            loss=metrics["loss"],
-                            grad_norm=metrics["grad_norm"],
-                            suspicion=metrics["suspicion"],
-                            reputation=metrics["reputation"],
-                            active=metrics["active"],
-                            q_hat=metrics["q_hat"])
-                else:
-                    self.params, self.opt_state, metrics = self.step_fn(
-                        self.params, self.opt_state, batch, sk)
-                if step % self.tcfg.log_every == 0 or \
-                        step == self.tcfg.steps - 1:
-                    rec = {"step": step, "loss": float(metrics["loss"]),
-                           "grad_norm": float(metrics["grad_norm"]),
-                           "wall": time.time() - t0}
-                    if "q_hat" in metrics:
-                        rec["q_hat"] = int(metrics["q_hat"])
-                        rec["n_active"] = int(jnp.sum(metrics["active"]))
-                    if self.eval_fn is not None:
-                        rec["eval"] = float(self.eval_fn(self.params))
-                    self.history.append(rec)
-                    if verbose:
-                        msg = (f"step {step:5d}  loss {rec['loss']:.4f}  "
-                               f"gnorm {rec['grad_norm']:.3e}")
-                        if "q_hat" in rec:
-                            msg += (f"  qhat {rec['q_hat']}  "
-                                    f"active {rec['n_active']}")
-                        if "eval" in rec:
-                            msg += f"  eval {rec['eval']:.4f}"
-                        print(msg, flush=True)
-                if (self.tcfg.checkpoint_path and self.tcfg.checkpoint_every
-                        and step and step % self.tcfg.checkpoint_every == 0):
-                    from repro.checkpoint.io import save_checkpoint
-                    save_checkpoint(self.tcfg.checkpoint_path,
-                                    self._checkpoint_tree(), step=step)
+        from repro.experiment.runner import plan_from_parts
+        from repro.experiment.topology import make_topology
+        plan = plan_from_parts(
+            model=self.model, batch_fn=self.batch_fn,
+            robust_cfg=self.robust_cfg, opt_cfg=self.opt_cfg,
+            num_workers=self.tcfg.num_workers, steps=self.tcfg.steps,
+            seed=self.tcfg.seed, eval_fn=self.eval_fn,
+            defense_cfg=self.defense_cfg, mesh=self.mesh,
+            record_every=self.tcfg.log_every,
+            checkpoint_path=self.tcfg.checkpoint_path,
+            checkpoint_every=self.tcfg.checkpoint_every,
+            telemetry_path=(self.defense_cfg.telemetry_path
+                            if self.defense_cfg is not None else None),
+            verbose=verbose)
+        result = make_topology("sync_ps").run(
+            plan, init_state=(self.params, self.opt_state,
+                              self.defense_state))
+        self.params = result.params
+        self.opt_state = result.opt_state
+        self.defense_state = result.defense_state
+        self.robust_cfg = result.robust_cfg   # post-adapt_b effective config
+        self.history = result.history
         return self.history

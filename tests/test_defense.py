@@ -441,3 +441,115 @@ def test_innerprod_rejected_in_streaming_mode():
     with pytest.raises(ValueError, match="innerprod"):
         _worker_attack(AttackConfig(name="innerprod", num_byzantine=2),
                        {"w": jnp.ones((3,))}, jnp.int32(0), KEY)
+
+
+# ---------------------------------------------------------------------------
+# slowburn: the reputation-EMA-targeting adaptive attack (satellite)
+# ---------------------------------------------------------------------------
+
+def test_slowburn_registered_as_step_aware_adaptive():
+    spec = registry.get_attack_spec("slowburn")
+    assert spec.kind == "adaptive" and spec.step_aware
+
+
+def test_slowburn_mimics_then_strikes():
+    """Phase semantics at the matrix level: pre-trigger rows sit at the
+    benign mean (maximally conforming), post-trigger rows are a coordinated
+    inner-product strike; no step = worst case (strike)."""
+    from repro.core.attacks import make_attack
+    key = jax.random.fold_in(KEY, 3)
+    u = 1.0 + 0.1 * jax.random.normal(key, (M, D))
+    atk = make_attack(AttackConfig(name="slowburn", num_byzantine=6,
+                                   slowburn_trigger=10))
+    mean = np.broadcast_to(np.asarray(jnp.mean(u[6:], axis=0)), (6, D))
+    mimic = np.asarray(atk(key, u, jnp.int32(0)))
+    np.testing.assert_allclose(mimic[:6], mean, atol=0.05)
+    strike = np.asarray(atk(key, u, jnp.int32(10)))
+    np.testing.assert_allclose(strike[:6], -100.0 * mean, rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(atk(key, u)), strike)
+    # benign rows untouched in both phases
+    np.testing.assert_allclose(mimic[6:], np.asarray(u)[6:])
+
+
+def test_slowburn_defeats_then_loses_to_reputation_via_scenario():
+    """Through a ScenarioSpec: during the trust-building phase the detector
+    sees nothing (q̂=0, everyone active — the attack's design); after the
+    strike the scores spike, the banked reputation drains over the EMA lag,
+    and the colluders end ejected."""
+    import dataclasses
+    from repro.experiment import (DataSpec, ModelSpec, ScenarioSpec,
+                                  run_experiment)
+    spec = ScenarioSpec(
+        name="slowburn", topology="sync_ps",
+        model=ModelSpec(kind="mlp", dims=(32, 32, 10)),
+        data=DataSpec(kind="classification", dim=32, batch_per_worker=8,
+                      seed=1),
+        robust=RobustConfig(rule="phocas", b=6, q=6),
+        attack=AttackConfig(name="slowburn", num_byzantine=6,
+                            slowburn_trigger=10),
+        defense=DefenseConfig(),
+        num_workers=M, steps=25, log_every=1)
+    res = run_experiment(spec)
+    pre = [r for r in res.history if "loss" in r and r["step"] < 10]
+    post = [r for r in res.history if "loss" in r and r["step"] >= 20]
+    # phase 1: undetected and fully trusted (that IS the attack)
+    assert all(r["q_hat"] == 0 for r in pre), pre
+    assert all(r["n_active"] == M for r in pre), pre
+    # phase 2: detected and ejected once the EMA lag is paid
+    assert all(r["q_hat"] == 6 for r in post), post
+    active = np.asarray(res.defense_state["active"])
+    assert active[:6].sum() == 0, active       # colluders ejected
+    assert active[6:].sum() == M - 6, active   # benign workers untouched
+    # the strike itself stayed contained: phocas b=6 trims all 6 rows
+    assert all(np.isfinite(r["loss"]) for r in res.history if "loss" in r)
+
+
+# ---------------------------------------------------------------------------
+# adapt_b: detector q̂ -> rule parameters (ROADMAP item a, satellite)
+# ---------------------------------------------------------------------------
+
+def test_adapt_b_recovers_underprovisioned_phocas():
+    """Phocas launched with b=1 against q=6 signflip workers fails hard;
+    with DefenseConfig.adapt_b the online q̂ raises b mid-run (1 -> 6) and
+    training recovers.  The ejection gate is disabled (eject_below=0) in
+    BOTH arms so the measured effect is the b/q re-tuning alone."""
+    import dataclasses
+    from repro.experiment import (DataSpec, ModelSpec, ScenarioSpec,
+                                  run_experiment)
+    base = ScenarioSpec(
+        name="adapt", topology="sync_ps",
+        model=ModelSpec(kind="mlp", dims=(64, 64, 10)),
+        data=DataSpec(kind="classification", dim=64, batch_per_worker=20,
+                      seed=1),
+        robust=RobustConfig(rule="phocas", b=1, q=1),
+        attack=AttackConfig(name="signflip", num_byzantine=6),
+        num_workers=M, steps=50, log_every=10)
+    common = dict(eject_below=0.0, detector_min_gap=0.05)
+    adaptive = run_experiment(dataclasses.replace(
+        base, defense=DefenseConfig(adapt_b=True, adapt_patience=1,
+                                    **common)))
+    fixed = run_experiment(dataclasses.replace(
+        base, defense=DefenseConfig(**common)))
+    assert adaptive.robust_cfg.b == 6, adaptive.robust_cfg
+    events = [r for r in adaptive.history if "adapted_b" in r]
+    assert events and events[-1]["adapted_b"] == 6, events
+    assert fixed.robust_cfg.b == 1
+    assert adaptive.final_eval > 0.9, adaptive.final_eval
+    assert fixed.final_eval < 0.5, fixed.final_eval
+    assert adaptive.final_eval - fixed.final_eval > 0.4
+
+
+def test_adapt_b_noop_on_clean_run():
+    """No attack -> q̂ stays 0 -> no adaptation, no re-jit."""
+    from repro.experiment import (DataSpec, ModelSpec, ScenarioSpec,
+                                  run_experiment)
+    spec = ScenarioSpec(
+        name="adapt-clean", topology="sync_ps",
+        model=ModelSpec(kind="mlp", dims=(32, 32, 10)),
+        data=DataSpec(kind="classification", dim=32, batch_per_worker=8),
+        robust=RobustConfig(rule="phocas", b=2, q=2),
+        defense=DefenseConfig(adapt_b=True),
+        num_workers=M, steps=8, log_every=4)
+    res = run_experiment(spec)
+    assert res.robust_cfg.b == 2
+    assert not any("adapted_b" in r for r in res.history)

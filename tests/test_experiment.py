@@ -1,0 +1,274 @@
+"""repro.experiment: ScenarioSpec round-trips, registry-metadata
+validation, the topology × rule × attack smoke grid, and shim-vs-new-path
+trajectory equivalence for all three topologies."""
+import dataclasses
+import glob
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import AttackConfig, RobustConfig
+from repro.defense import DefenseConfig
+from repro.experiment import (DataSpec, ModelSpec, ScenarioSpec, SpecError,
+                              available_topologies, run_experiment)
+from repro.optim import OptConfig
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+M, DIM = 8, 16
+
+
+def small_spec(**kw) -> ScenarioSpec:
+    base = dict(
+        name="t", topology="sync_ps",
+        model=ModelSpec(kind="mlp"),
+        data=DataSpec(kind="classification", dim=DIM, batch_per_worker=4),
+        robust=RobustConfig(rule="phocas", b=2, q=2),
+        attack=AttackConfig(name="gaussian", num_byzantine=2),
+        num_workers=M, steps=3, log_every=1)
+    base.update(kw)
+    return ScenarioSpec(**base)
+
+
+# ---------------------------------------------------------------------------
+# JSON round-trip
+# ---------------------------------------------------------------------------
+
+def test_to_json_from_json_identity():
+    """Bit-identical round trip, nested configs and tuples included."""
+    spec = small_spec(
+        topology="async_ps",
+        topology_params={"staleness": 3, "update_clip": 5.0},
+        defense=DefenseConfig(reputation_decay=0.8, adapt_b=True),
+        attack=AttackConfig(name="bitflip", num_byzantine=1,
+                            bitflip_bits=(1, 2, 32)),
+        schedule="cosine_decay", schedule_params={"final_frac": 0.2},
+        opt=OptConfig(name="momentum", lr=0.05))
+    s = spec.to_json()
+    back = ScenarioSpec.from_json(s)
+    assert back == spec
+    assert back.to_json() == s                       # byte-identical
+    # tuples come back as tuples (not lists) — dataclass equality is real
+    assert back.attack.bitflip_bits == (1, 2, 32)
+    assert isinstance(back.attack.bitflip_bits, tuple)
+    assert back.defense.adapt_b is True
+    assert back.topology_params == {"staleness": 3, "update_clip": 5.0}
+
+
+def test_from_dict_rejects_unknown_fields():
+    d = small_spec().to_dict()
+    d["nope"] = 1
+    with pytest.raises(SpecError, match="nope"):
+        ScenarioSpec.from_dict(d)
+    d2 = small_spec().to_dict()
+    d2["robust"]["typo_field"] = 1
+    with pytest.raises(SpecError, match="typo_field"):
+        ScenarioSpec.from_dict(d2)
+
+
+def test_checked_in_scenarios_are_canonical():
+    """examples/scenarios/*.json: load, validate, and stay byte-identical
+    under a round trip (the files are the spec's own canonical form)."""
+    paths = sorted(glob.glob(os.path.join(REPO, "examples", "scenarios",
+                                          "*.json")))
+    assert len(paths) >= 6, paths      # CI smoke matrix: 3 topologies x 2
+    topos = set()
+    for p in paths:
+        spec = ScenarioSpec.load(p).validate()
+        topos.add(spec.topology)
+        with open(p) as f:
+            assert f.read() == spec.to_json() + "\n", p
+    assert topos == set(available_topologies())
+
+
+# ---------------------------------------------------------------------------
+# Validation: actionable errors at spec-build time
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("mutation,match", [
+    (dict(topology="ring"), "unknown topology"),
+    (dict(robust=RobustConfig(rule="nope")), "unknown aggregation rule"),
+    (dict(attack=AttackConfig(name="nope", num_byzantine=1)),
+     "unknown attack"),
+    (dict(robust=RobustConfig(rule="phocas", b=9)), "b <="),
+    (dict(robust=RobustConfig(rule="krum", q=7)), "q <= m-3"),
+    (dict(topology="streaming", robust=RobustConfig(rule="krum", q=2)),
+     "streaming-capable"),
+    (dict(topology="streaming",
+          attack=AttackConfig(name="omniscient", num_byzantine=2)),
+     "cannot be simulated"),
+    (dict(topology="streaming", defense=DefenseConfig()),
+     "does not support the defense"),
+    (dict(robust=RobustConfig(rule="mean"), defense=DefenseConfig()),
+     "score-emitting"),
+    (dict(topology="async_ps", defense=DefenseConfig(adapt_b=True)),
+     "adapt_b"),
+    (dict(topology="async_ps", mesh="8x1"), "mesh"),
+    (dict(topology="async_ps", topology_params={"tau": 3}),
+     "unknown topology_params"),
+    (dict(mesh="4x2"), "data axis"),
+    (dict(mesh="abc"), "look like"),
+    (dict(model=ModelSpec(kind="arch"), data=DataSpec(kind="tokens")),
+     "model.arch"),
+    (dict(model=ModelSpec(kind="arch", arch="gemma2-2b-reduced")),
+     "tokens"),
+    (dict(model=ModelSpec(kind="cnn")), "cnn_size"),
+    (dict(model=ModelSpec(kind="mlp", dims=(4, 4, 10))), "data.dim"),
+    (dict(schedule="linear"), "unknown schedule"),
+    (dict(steps=0), "steps"),
+    (dict(robust=RobustConfig(rule="phocas",
+                              attack=AttackConfig(name="zero",
+                                                  num_byzantine=1)),
+          attack=AttackConfig(name="gaussian", num_byzantine=1)),
+     "attack axis"),
+    (dict(robust=RobustConfig(rule="median", backend="pallas")),
+     "declares no"),
+])
+def test_invalid_specs_fail_with_actionable_errors(mutation, match):
+    with pytest.raises(SpecError, match=match):
+        small_spec(**mutation).validate()
+
+
+def test_opt_lr_must_be_a_number():
+    spec = small_spec(opt=OptConfig(lr=lambda s: 0.1))
+    with pytest.raises(SpecError, match="schedule"):
+        spec.validate()
+
+
+def test_legacy_embedded_attack_is_honored():
+    """A legacy RobustConfig with its own attack still works when the
+    spec-level attack axis is clean."""
+    spec = small_spec(
+        robust=RobustConfig(rule="phocas", b=2, q=2,
+                            attack=AttackConfig(name="zero",
+                                                num_byzantine=1)),
+        attack=AttackConfig(name="none"))
+    assert spec.validate().effective_attack().name == "zero"
+    assert spec.effective_robust().attack.name == "zero"
+
+
+# ---------------------------------------------------------------------------
+# Smoke grid: topology × rule × attack through the one entry point
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("topology", available_topologies())
+@pytest.mark.parametrize("rule", ["mean", "phocas"])
+@pytest.mark.parametrize("attack", ["none", "gaussian"])
+def test_topology_rule_attack_smoke_grid(topology, rule, attack):
+    spec = small_spec(
+        topology=topology,
+        topology_params=({"staleness": 2} if topology == "async_ps" else {}),
+        robust=RobustConfig(rule=rule, b=2, q=2),
+        attack=AttackConfig(name=attack, num_byzantine=2))
+    result = run_experiment(spec)
+    assert result.spec is spec
+    assert len(result.history) == spec.steps       # log_every=1
+    last = result.history[-1]
+    assert last["step"] == spec.steps - 1
+    assert np.isfinite(last["eval"])
+    if rule == "phocas" or attack == "none":
+        # robust (or clean) runs keep finite losses end-to-end
+        for rec in result.history:
+            for v in rec.values():
+                assert np.isfinite(v), (rec, result.history)
+
+
+def test_schedule_resolution_changes_trajectory():
+    s1 = small_spec(steps=4)
+    s2 = small_spec(steps=4, schedule="cosine_decay",
+                    schedule_params={"final_frac": 0.0})
+    l1 = [r["loss"] for r in run_experiment(s1).history]
+    l2 = [r["loss"] for r in run_experiment(s2).history]
+    assert l1[0] == l2[0]                  # same init, same first step
+    assert l1[-1] != l2[-1]                # decayed lr diverges the path
+
+
+# ---------------------------------------------------------------------------
+# Shim vs new path: identical trajectories on all three topologies
+# ---------------------------------------------------------------------------
+
+def _manual_parts(spec: ScenarioSpec):
+    from repro.data import ClassificationData
+    from repro.models.mlp import build_mlp_model, mlp_accuracy
+    ds = spec.data
+    data = ClassificationData(num_classes=ds.num_classes, dim=ds.dim,
+                              noise=ds.noise, seed=ds.seed)
+    model = build_mlp_model(dims=spec.model.dims)
+    batch_fn = lambda i: data.batch(i, spec.num_workers  # noqa: E731
+                                    * ds.batch_per_worker)
+    test = data.test_set(1024)
+    return model, batch_fn, lambda p: mlp_accuracy(p, test)
+
+
+EQUIV = dict(model=ModelSpec(kind="mlp", dims=(DIM, 16, 10)),
+             data=DataSpec(kind="classification", dim=DIM,
+                           batch_per_worker=4, seed=3),
+             robust=RobustConfig(rule="phocas", b=2, q=2),
+             attack=AttackConfig(name="gaussian", num_byzantine=2),
+             num_workers=M, steps=6, log_every=10)
+
+
+def test_sync_shim_matches_run_experiment():
+    from repro.train import Trainer, TrainerConfig
+    spec = small_spec(**EQUIV)
+    new = run_experiment(spec)
+    model, batch_fn, eval_fn = _manual_parts(spec)
+    tcfg = TrainerConfig(num_workers=M, steps=spec.steps, log_every=10,
+                         seed=spec.seed)
+    trainer = Trainer(model, batch_fn, tcfg, spec.effective_robust(),
+                      spec.opt, eval_fn=eval_fn)
+    old = trainer.run(verbose=False)
+    assert [r["step"] for r in old] == [r["step"] for r in new.history]
+    np.testing.assert_array_equal([r["loss"] for r in old],
+                                  [r["loss"] for r in new.history])
+    np.testing.assert_array_equal([r["eval"] for r in old],
+                                  [r["eval"] for r in new.history])
+
+
+def test_async_shim_matches_run_experiment():
+    from repro.train.async_sgd import AsyncConfig, run_async_training
+    spec = small_spec(**EQUIV)
+    spec = dataclasses.replace(spec, topology="async_ps",
+                               topology_params={"staleness": 2})
+    new = run_experiment(spec)
+    model, batch_fn, eval_fn = _manual_parts(spec)
+    old = run_async_training(
+        model, batch_fn, spec.effective_robust(), spec.opt,
+        AsyncConfig(num_workers=M, staleness=2, seed=spec.seed),
+        spec.steps, eval_fn=eval_fn)
+    np.testing.assert_array_equal([r["eval"] for r in old],
+                                  [r["eval"] for r in new.history])
+
+
+def test_streaming_shim_matches_run_experiment():
+    from repro.train.streaming import run_streaming_training
+    spec = small_spec(**EQUIV)
+    spec = dataclasses.replace(spec, topology="streaming")
+    new = run_experiment(spec)
+    model, batch_fn, eval_fn = _manual_parts(spec)
+    old = run_streaming_training(
+        model, batch_fn, spec.effective_robust(), spec.opt,
+        num_workers=M, steps=spec.steps, seed=spec.seed, eval_fn=eval_fn)
+    np.testing.assert_array_equal([r["loss"] for r in old],
+                                  [r["loss"] for r in new.history])
+    np.testing.assert_array_equal([r["eval"] for r in old],
+                                  [r["eval"] for r in new.history])
+
+
+# ---------------------------------------------------------------------------
+# Result surface
+# ---------------------------------------------------------------------------
+
+def test_result_final_helpers_and_telemetry(tmp_path):
+    tel = str(tmp_path / "tel.jsonl")
+    spec = small_spec(topology="streaming", telemetry_path=tel,
+                      attack=AttackConfig(name="none"))
+    res = run_experiment(spec)
+    assert res.final_loss == res.history[-1]["loss"]
+    assert res.final_eval == res.history[-1]["eval"]
+    assert res.eval_curve[-1][0] == spec.steps - 1
+    from repro.defense import read_jsonl
+    recs = read_jsonl(tel)
+    assert len(recs) == spec.steps
+    assert all(r["kind"] == "streaming" for r in recs)

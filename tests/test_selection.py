@@ -403,3 +403,28 @@ def test_layouts_with_scores_and_gate_match_local():
     assert len(results) == 5 * 2 * 2 * 2
     bad = [k for k, v in results.items() if not v]
     assert not bad, bad
+
+
+def test_stable_ranks_fallback_warns_once_above_cliff():
+    """Above _PAIRWISE_MAX_M stable_ranks routes through the double-argsort
+    fallback — same bits, but it must say so (once per process) instead of
+    silently re-paying the two XLA sorts (ROADMAP selection follow-up c)."""
+    import warnings
+    from repro.core import selection
+    m = selection._PAIRWISE_MAX_M + 1
+    keys = [jnp.arange(4, dtype=jnp.float32) * i for i in range(m)]
+    orig = selection._RANK_FALLBACK_WARNED
+    selection._RANK_FALLBACK_WARNED = False
+    try:
+        with pytest.warns(RuntimeWarning, match="double-argsort"):
+            got = selection.stable_ranks(keys)
+        # exact fallback semantics: argsort(argsort(...))
+        ref = jnp.argsort(jnp.argsort(jnp.stack(keys), axis=0), axis=0)
+        np.testing.assert_array_equal(np.asarray(jnp.stack(got)),
+                                      np.asarray(ref))
+        # one-time: a second call stays silent
+        with warnings.catch_warnings():
+            warnings.simplefilter("error")
+            selection.stable_ranks(keys)
+    finally:
+        selection._RANK_FALLBACK_WARNED = orig
