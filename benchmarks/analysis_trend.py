@@ -1,0 +1,42 @@
+"""Trend the static-analysis finding counts per rule id.
+
+``python -m benchmarks.run --only analysis`` runs ``repro.analysis`` over
+the same path set CI gates on (``src benchmarks tests``) and persists one
+row per rule id — including zero-count rules, so the artifact's shape is
+stable and a regression shows up as a count going 0 -> N, not as a new
+key appearing.  The raw findings also land as telemetry-compatible JSONL
+(``BENCH_analysis_findings.jsonl``) readable by
+``repro.defense.telemetry.read_jsonl`` for the same trajectory tooling
+that consumes defense telemetry.
+"""
+from __future__ import annotations
+
+import os
+import time
+from typing import Dict, List
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def main() -> List[Dict]:
+    from repro.analysis import RULES, run_analysis
+    from repro.analysis.__main__ import write_jsonl
+
+    paths = [os.path.join(REPO_ROOT, p) for p in ("src", "benchmarks", "tests")]
+    t0 = time.time()
+    findings = run_analysis(paths)
+    wall_us = (time.time() - t0) * 1e6
+
+    write_jsonl(findings,
+                os.path.join(REPO_ROOT, "BENCH_analysis_findings.jsonl"))
+
+    counts = {rule: 0 for rule in RULES}
+    for f in findings:
+        counts[f.rule] = counts.get(f.rule, 0) + 1
+    return [{
+        "rule": rule,
+        "severity": RULES[rule][0],
+        "count": counts[rule],
+        "wall_us": round(wall_us),
+        "paths": ["src", "benchmarks", "tests"],
+    } for rule in sorted(RULES)]

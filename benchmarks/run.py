@@ -120,6 +120,13 @@ def main(full: bool = False, only: str = "") -> None:
                  f"overhead/{r['rule']},{r['us_per_step']:.0f},"
                  f"x_mean={r['overhead_vs_mean']:.2f}" for r in rows])
 
+    if pick("analysis"):
+        from benchmarks.analysis_trend import main as f
+        _run("analysis", lambda: f(),
+             lambda rows: [
+                 f"analysis/{r['rule']},0,count={r['count']}"
+                 for r in rows if r["count"]] or ["analysis/clean,0,count=0"])
+
     if pick("roofline"):
         from benchmarks.roofline import main as f
         _run("roofline", lambda: f(markdown=False),

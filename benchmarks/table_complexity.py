@@ -44,8 +44,9 @@ def main(out: str = "results/table_complexity.csv", full: bool = False):
                 name, dataclasses.replace(params, backend="pallas")).reduce
     rows = []
     key = jax.random.PRNGKey(0)
-    for m, d in sizes:
-        u = jax.random.normal(key, (m, d), jnp.float32)
+    for i, (m, d) in enumerate(sizes):
+        u = jax.random.normal(jax.random.fold_in(key, i), (m, d),
+                              jnp.float32)
         for name, fn in rules.items():
             us = _timeit(fn, u)
             rows.append({"m": m, "d": d, "rule": name, "us_per_call": us})

@@ -1,0 +1,25 @@
+"""repro.analysis — repo-aware static-analysis pass (DESIGN.md §10).
+
+This codebase has already shipped two statically-detectable bugs (the dead
+1-way ``jax.random.split`` in ``gambler_attack``, the PYTHONHASHSEED-
+dependent ``hash(str(shape))`` streaming-attack seeding), and the
+Rule/Attack/Topology registries now carry metadata contracts that nothing
+verified until a sweep crashed at runtime.  This package is the correctness
+tooling that keeps those invariants honest as the repo grows:
+
+* ``prng``      — PRNG-discipline AST checks (PRNG001..PRNG004);
+* ``contracts`` — plugin-metadata conformance via import + inspect
+                  (CONTRACT001..CONTRACT008, PALLAS003);
+* ``axes``      — collective axis-name + shard_map spec checks
+                  (AXIS001..AXIS002);
+* ``layout``    — Pallas block-layout / cap-constant checks
+                  (PALLAS001..PALLAS002).
+
+Run it as ``python -m repro.analysis [paths]`` (non-zero exit on errors),
+or programmatically via :func:`run_analysis`.  Audited false positives are
+suppressed in place with ``# repro: noqa[RULE]  -- reason``.
+"""
+from repro.analysis.engine import run_analysis
+from repro.analysis.findings import Finding, RULES
+
+__all__ = ["run_analysis", "Finding", "RULES"]

@@ -1,0 +1,61 @@
+"""CLI: ``python -m repro.analysis [paths...]``.
+
+Prints one ``path:line: severity RULE: message [fix: hint]`` line per
+finding plus a summary, exits 1 when any error-severity finding survives
+noqa filtering.  ``--jsonl PATH`` additionally writes telemetry-compatible
+records (``repro.defense.telemetry`` format: ``{"t", "kind", "step", ...}``)
+so ``benchmarks/run.py --only analysis`` can trend per-rule counts.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+from typing import List, Optional
+
+from repro.analysis.engine import run_analysis
+from repro.analysis.findings import Finding
+
+
+def write_jsonl(findings: List[Finding], path: str) -> None:
+    with open(path, "w", encoding="utf-8") as fh:
+        for f in findings:
+            rec = {"t": time.time(), "kind": "analysis", "step": 0}
+            rec.update(f.to_record())
+            fh.write(json.dumps(rec) + "\n")
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="repo-aware static analysis: PRNG discipline, plugin "
+                    "contracts, collective axes, Pallas layout")
+    ap.add_argument("paths", nargs="*", default=["src"],
+                    help="files or directories to analyze (default: src)")
+    ap.add_argument("--jsonl", metavar="PATH",
+                    help="also write findings as telemetry-style JSONL")
+    ap.add_argument("--no-contracts", action="store_true",
+                    help="skip the registry contract audit")
+    ap.add_argument("--scan-modules", action="store_true",
+                    help="import each FILE argument and audit the plugin "
+                         "classes it defines (fixture/CI hook)")
+    args = ap.parse_args(argv)
+
+    paths = args.paths or ["src"]
+    findings = run_analysis(paths, contracts=not args.no_contracts,
+                            scan_modules=args.scan_modules)
+    for f in findings:
+        print(f.render())
+    if args.jsonl:
+        write_jsonl(findings, args.jsonl)
+
+    errors = sum(1 for f in findings if f.severity == "error")
+    warnings = len(findings) - errors
+    print(f"repro.analysis: {errors} error(s), {warnings} warning(s) "
+          f"in {len(paths)} path(s)")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

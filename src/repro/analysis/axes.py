@@ -1,0 +1,203 @@
+"""Collective-axis analyzer (rules AXIS001-AXIS002).
+
+Mesh axes are matched by NAME (``dist/sharding.py``): a typo'd axis-name
+literal in a ``psum``/``all_gather``/``ppermute`` call fails only when the
+exact mesh shape is exercised — usually a multi-device CI gap.  AXIS001
+pins every axis-name string literal passed to a collective (jax.lax or the
+repro ``dist.collectives`` helpers) to the sharding-module vocabulary.
+
+AXIS002 checks ``shard_map`` wiring statically: when the wrapped function
+is a plain local ``def`` and ``in_specs`` is a literal tuple, the tuple's
+arity must equal the function's positional-parameter count (and a literal
+``out_specs`` tuple must match the function's literal tuple returns).
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, FrozenSet, List, Optional
+
+from repro.analysis.astutil import (ImportTable, literal_str_elements,
+                                    resolve_call)
+from repro.analysis.findings import Finding
+
+# Fallback when repro.dist.sharding cannot import (vocabulary drift between
+# the fallback and AXIS_VOCAB is caught by test_analysis.py).
+_DEFAULT_VOCAB = frozenset({"data", "pod", "model", "tensor", "tp", "mp"})
+
+# dotted origin -> (positional index of the axis-name argument, kwarg name)
+_LAX_COLLECTIVES: Dict[str, tuple] = {
+    "jax.lax.psum": (1, "axis_name"),
+    "jax.lax.pmean": (1, "axis_name"),
+    "jax.lax.pmax": (1, "axis_name"),
+    "jax.lax.pmin": (1, "axis_name"),
+    "jax.lax.all_gather": (1, "axis_name"),
+    "jax.lax.all_to_all": (1, "axis_name"),
+    "jax.lax.ppermute": (1, "axis_name"),
+    "jax.lax.pshuffle": (1, "axis_name"),
+    "jax.lax.psum_scatter": (1, "axis_name"),
+    "jax.lax.axis_index": (0, "axis_name"),
+    "jax.lax.axis_size": (0, "axis_name"),
+    # repro.dist.collectives helpers (axis-name sequences by contract)
+    "repro.dist.collectives.psum_axes": (1, "names"),
+    "repro.dist.collectives.gather_workers": (1, "axes"),
+    "repro.dist.collectives.all_to_all_scatter": (1, "axes"),
+    "repro.dist.collectives.gather_slices": (1, "axes"),
+    "repro.dist.collectives.worker_slice_index": (0, "axes"),
+    "repro.dist.collectives.axis_size": (0, "axes"),
+}
+
+_SHARD_MAP_NAMES = frozenset({
+    "jax.shard_map", "jax.experimental.shard_map.shard_map"})
+
+
+def axis_vocabulary() -> FrozenSet[str]:
+    """The repo's mesh-axis vocabulary (import-resolved, with fallback)."""
+    try:
+        from repro.dist.sharding import AXIS_VOCAB
+        return frozenset(AXIS_VOCAB)
+    except Exception:
+        return _DEFAULT_VOCAB
+
+
+def _axis_arg(call: ast.Call, pos: int, kwarg: str) -> Optional[ast.expr]:
+    for kw in call.keywords:
+        if kw.arg == kwarg:
+            return kw.value
+    if len(call.args) > pos:
+        return call.args[pos]
+    return None
+
+
+class _FunctionIndex:
+    """Positional-arity + literal-return info for every named def."""
+
+    def __init__(self, tree: ast.Module):
+        self.arity: Dict[str, int] = {}
+        self.ret_arity: Dict[str, Optional[int]] = {}
+        counts: Dict[str, int] = {}
+        for node in ast.walk(tree):
+            if not isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                continue
+            counts[node.name] = counts.get(node.name, 0) + 1
+            if node.args.vararg is not None:
+                self.arity.pop(node.name, None)
+                counts[node.name] += 1     # force ambiguity -> skipped
+                continue
+            self.arity[node.name] = len(node.args.posonlyargs) \
+                + len(node.args.args)
+            self.ret_arity[node.name] = _literal_return_arity(node)
+        # A name bound by several defs is ambiguous: drop it.
+        for name, n in counts.items():
+            if n > 1:
+                self.arity.pop(name, None)
+                self.ret_arity.pop(name, None)
+
+
+def _literal_return_arity(fn) -> Optional[int]:
+    """Common arity of the function's OWN literal-tuple returns (None when
+    any return is non-literal or arities disagree)."""
+    arities = set()
+    for node in ast.walk(fn):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)) \
+                and node is not fn:
+            continue
+        if isinstance(node, ast.Return):
+            if node.value is None:
+                return None
+            if _owner_function(fn, node) is not fn:
+                continue
+            if isinstance(node.value, ast.Tuple):
+                arities.add(len(node.value.elts))
+            else:
+                return None
+    if len(arities) == 1:
+        return arities.pop()
+    return None
+
+
+def _owner_function(root, target) -> ast.AST:
+    """The innermost function containing ``target`` under ``root``."""
+    owner = root
+
+    def visit(node, current):
+        nonlocal owner
+        if node is target:
+            owner = current
+            return True
+        nxt = node if isinstance(
+            node, (ast.FunctionDef, ast.AsyncFunctionDef, ast.Lambda)) \
+            else current
+        return any(visit(c, nxt) for c in ast.iter_child_nodes(node))
+
+    visit(root, root)
+    return owner
+
+
+def analyze(path: str, tree: ast.Module) -> List[Finding]:
+    imports = ImportTable(tree)
+    vocab = axis_vocabulary()
+    findings: List[Finding] = []
+    fn_index = _FunctionIndex(tree)
+
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        resolved = resolve_call(node, imports)
+        if resolved in _LAX_COLLECTIVES:
+            pos, kwarg = _LAX_COLLECTIVES[resolved]
+            arg = _axis_arg(node, pos, kwarg)
+            if arg is None:
+                continue
+            literals, _ = literal_str_elements(arg)
+            for value, lineno in literals:
+                if value not in vocab:
+                    findings.append(Finding(
+                        rule="AXIS001", path=path, line=lineno,
+                        message=f"axis name {value!r} passed to "
+                                f"{resolved.rsplit('.', 1)[-1]} is not in "
+                                f"the dist/sharding.py vocabulary "
+                                f"{sorted(vocab)}",
+                        hint="use an axis name from "
+                             "repro.dist.sharding.AXIS_VOCAB (or add the "
+                             "new role there first)"))
+        elif resolved in _SHARD_MAP_NAMES:
+            findings.extend(_check_shard_map(path, node, fn_index))
+    return findings
+
+
+def _check_shard_map(path: str, call: ast.Call,
+                     fn_index: _FunctionIndex) -> List[Finding]:
+    if not call.args or not isinstance(call.args[0], ast.Name):
+        return []
+    fname = call.args[0].id
+    findings: List[Finding] = []
+    in_specs = _kwarg(call, "in_specs")
+    out_specs = _kwarg(call, "out_specs")
+
+    arity = fn_index.arity.get(fname)
+    if arity is not None and isinstance(in_specs, ast.Tuple):
+        if len(in_specs.elts) != arity:
+            findings.append(Finding(
+                rule="AXIS002", path=path, line=call.lineno,
+                message=f"shard_map in_specs has {len(in_specs.elts)} "
+                        f"entries but {fname}() takes {arity} positional "
+                        "arguments",
+                hint="give every wrapped-function argument exactly one "
+                     "PartitionSpec"))
+
+    ret = fn_index.ret_arity.get(fname)
+    if ret is not None and isinstance(out_specs, ast.Tuple) \
+            and len(out_specs.elts) != ret:
+        findings.append(Finding(
+            rule="AXIS002", path=path, line=call.lineno,
+            message=f"shard_map out_specs has {len(out_specs.elts)} "
+                    f"entries but {fname}() returns {ret} values",
+            hint="match out_specs to the wrapped function's return tuple"))
+    return findings
+
+
+def _kwarg(call: ast.Call, name: str) -> Optional[ast.expr]:
+    for kw in call.keywords:
+        if kw.arg == name:
+            return kw.value
+    return None

@@ -1,0 +1,487 @@
+"""Plugin-contract conformance analyzer (CONTRACT001-CONTRACT008, PALLAS003).
+
+The Rule/Attack/Topology registries (DESIGN.md §6/§9) carry metadata the
+whole stack dispatches on — ``emits_scores``, ``has_kernel``,
+``supports_streaming``, ``fused_gate``, ``uses_b``/``uses_q``, attack
+``step_aware``, topology ``param_names``.  Nothing else verifies that the
+metadata matches the implementation; a drifted flag surfaces as a silent
+wrong answer (a defense run scoring with the uninformative default) or a
+mid-sweep crash.  This analyzer imports the registries and inspects every
+registered plugin:
+
+* CONTRACT001 — ``emits_scores`` <=> ``reduce_sharded_with_scores`` is
+  overridden below :class:`AggregatorRule`.
+* CONTRACT002 — ``has_kernel`` <=> ``_reduce_pallas`` is overridden AND the
+  ``repro.kernels.*`` module it dispatches to is importable.
+* CONTRACT003 — ``supports_streaming`` <=> the rule is in
+  ``train/streaming.py``'s ``STREAMING_IMPL_RULES`` (the scan actually
+  implements it).
+* CONTRACT004 — ``uses_b``/``uses_q`` <=> the rule's own methods read
+  ``params.b``/``params.q``.
+* CONTRACT005 — every attack factory's closure matches the
+  ``(key, u[, step=None])`` signature contract (3rd arg iff ``step_aware``).
+* CONTRACT006 — topology ``param_names`` equals the ``topology_params``
+  keys its ``run()`` actually reads.
+* CONTRACT007 — ``fused_gate`` <=> ``reduce_sharded_gated_with_scores`` is
+  overridden (the one-pass defense path, satellite routing metadata).
+* CONTRACT008 — topology ``attack_allowlist`` / streaming
+  ``STREAMING_ATTACKS`` entries name registered attacks.
+* PALLAS003 — live cross-module layout invariants (COUNTS_LANES == 128,
+  tile divisibility, selection caps ordered, ref oracles importable).
+
+``check_registry()`` audits everything registered; ``check_module(path)``
+imports one file and audits the plugin objects defined in it (the fixture
+/ CI hook for deliberately-broken contracts).
+"""
+from __future__ import annotations
+
+import importlib.util
+import inspect
+import os
+import re
+import sys
+from typing import Iterable, List, Optional, Tuple
+
+from repro.analysis.findings import Finding
+
+
+def _anchor(obj) -> Tuple[str, int]:
+    """(relative path, definition line) for a class/function anchor."""
+    try:
+        path = inspect.getsourcefile(obj) or "<unknown>"
+        line = inspect.getsourcelines(obj)[1]
+    except (OSError, TypeError):
+        return "<unknown>", 1
+    try:
+        rel = os.path.relpath(path)
+        if not rel.startswith(".."):
+            path = rel
+    except ValueError:
+        pass
+    return path, line
+
+
+def _defining_class(cls: type, name: str) -> Optional[type]:
+    for k in cls.__mro__:
+        if name in k.__dict__:
+            return k
+    return None
+
+
+def _overridden(cls: type, base: type, name: str) -> bool:
+    """Is ``name`` implemented below ``base`` in ``cls``'s MRO?"""
+    owner = _defining_class(cls, name)
+    return owner is not None and owner is not base \
+        and issubclass(owner, base)
+
+
+def _own_source(cls: type, base: type) -> str:
+    """Concatenated source of every method ``cls`` defines below ``base``
+    (shared intermediate bases like _TrimFamilyRule count — their reads
+    are the subclass's reads)."""
+    chunks = []
+    for k in cls.__mro__:
+        if k is base or not issubclass(k, base):
+            continue
+        for obj in vars(k).values():
+            fn = getattr(obj, "__func__", obj)
+            if inspect.isfunction(fn):
+                try:
+                    chunks.append(inspect.getsource(fn))
+                except (OSError, TypeError):
+                    pass
+    return "\n".join(chunks)
+
+
+# ---------------------------------------------------------------------------
+# Rule checks
+# ---------------------------------------------------------------------------
+
+def _check_rule(cls) -> List[Finding]:
+    from repro.core.registry import AggregatorRule
+    findings: List[Finding] = []
+    path, line = _anchor(cls)
+    name = getattr(cls, "name", cls.__name__)
+
+    def finding(rule: str, msg: str, hint: str) -> None:
+        findings.append(Finding(rule=rule, path=path, line=line,
+                                message=f"rule {name!r}: {msg}", hint=hint))
+
+    src = _own_source(cls, AggregatorRule)
+
+    scores = _overridden(cls, AggregatorRule, "reduce_sharded_with_scores")
+    if cls.emits_scores and not scores:
+        finding("CONTRACT001",
+                "emits_scores=True but reduce_sharded_with_scores is the "
+                "uninformative base default",
+                "override reduce_sharded_with_scores (or drop "
+                "emits_scores)")
+    elif scores and not cls.emits_scores:
+        finding("CONTRACT001",
+                "reduce_sharded_with_scores is overridden but "
+                "emits_scores=False hides it from score_rules()",
+                "set emits_scores = True")
+
+    pallas = _overridden(cls, AggregatorRule, "_reduce_pallas")
+    if cls.has_kernel and not pallas:
+        finding("CONTRACT002",
+                "has_kernel=True but _reduce_pallas is not implemented",
+                "implement _reduce_pallas dispatching to repro.kernels.*")
+    elif pallas and not cls.has_kernel:
+        finding("CONTRACT002",
+                "_reduce_pallas exists but has_kernel=False keeps "
+                "backend='pallas' unreachable",
+                "set has_kernel = True")
+    if cls.has_kernel and pallas:
+        owner = _defining_class(cls, "_reduce_pallas")
+        try:
+            psrc = inspect.getsource(owner.__dict__["_reduce_pallas"])
+        except (OSError, TypeError):
+            psrc = ""
+        mods = set(re.findall(r"repro\.kernels[\w.]*", psrc))
+        if not mods:
+            finding("CONTRACT002",
+                    "_reduce_pallas does not dispatch to a repro.kernels "
+                    "module",
+                    "import the kernel from repro.kernels.<rule>")
+        for mod in mods:
+            try:
+                found = importlib.util.find_spec(mod) is not None
+            except (ImportError, ValueError):
+                found = False
+            if not found:
+                finding("CONTRACT002",
+                        f"_reduce_pallas dispatches to {mod!r} which is "
+                        "not importable",
+                        "fix the kernel module path")
+
+    fused = _overridden(cls, AggregatorRule,
+                        "reduce_sharded_gated_with_scores")
+    if getattr(cls, "fused_gate", False) and not fused:
+        finding("CONTRACT007",
+                "fused_gate=True but reduce_sharded_gated_with_scores is "
+                "the two-pass base composition",
+                "override the gated hook with a one-pass implementation "
+                "(or drop fused_gate)")
+    elif fused and not getattr(cls, "fused_gate", False):
+        finding("CONTRACT007",
+                "reduce_sharded_gated_with_scores is overridden but "
+                "fused_gate=False mislabels the defense routing",
+                "set fused_gate = True so the conformance metadata "
+                "matches the one-pass path")
+
+    if cls.supports_streaming:
+        try:
+            from repro.train.streaming import STREAMING_IMPL_RULES
+        except Exception:
+            STREAMING_IMPL_RULES = ()
+        if name not in STREAMING_IMPL_RULES:
+            finding("CONTRACT003",
+                    "supports_streaming=True but train/streaming.py has "
+                    "no streaming formulation for it "
+                    f"(STREAMING_IMPL_RULES={sorted(STREAMING_IMPL_RULES)})",
+                    "add the streaming formulation or drop "
+                    "supports_streaming")
+
+    reads_b = re.search(r"params\.b\b", src) is not None
+    reads_q = re.search(r"params\.q\b", src) is not None
+    for flag, reads, pname in (("uses_b", reads_b, "b"),
+                               ("uses_q", reads_q, "q")):
+        declared = getattr(cls, flag)
+        if declared and not reads:
+            finding("CONTRACT004",
+                    f"{flag}=True but no method reads params.{pname}",
+                    f"read self.params.{pname} or drop {flag}")
+        elif reads and not declared:
+            finding("CONTRACT004",
+                    f"methods read params.{pname} but {flag}=False hides "
+                    "the dependency from spec validation",
+                    f"set {flag} = True")
+    return findings
+
+
+def _check_streaming_sync(rule_names: Iterable[str]) -> List[Finding]:
+    """Reverse direction of CONTRACT003 (the declared side lives in
+    :func:`_check_rule` so module scans cover it): every implemented
+    streaming rule must be registered and declare supports_streaming."""
+    from repro.core import registry
+    from repro.train import streaming
+    findings: List[Finding] = []
+    impl = set(streaming.STREAMING_IMPL_RULES)
+    names = set(rule_names)
+    spath, _ = _anchor(streaming)
+    for name in sorted(impl):
+        if name not in names:
+            findings.append(Finding(
+                rule="CONTRACT003", path=spath, line=1,
+                message=f"STREAMING_IMPL_RULES names unregistered rule "
+                        f"{name!r}",
+                hint="keep STREAMING_IMPL_RULES in sync with the "
+                     "registry"))
+            continue
+        cls = registry.get_rule(name)
+        if not cls.supports_streaming:
+            path, line = _anchor(cls)
+            findings.append(Finding(
+                rule="CONTRACT003", path=path, line=line,
+                message=f"train/streaming.py implements {name!r} but the "
+                        "rule does not declare supports_streaming",
+                hint="set supports_streaming = True"))
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# Attack checks
+# ---------------------------------------------------------------------------
+
+def _check_attack(spec) -> List[Finding]:
+    from repro.core.attacks import AttackConfig
+    findings: List[Finding] = []
+    path, line = _anchor(spec.factory)
+
+    def finding(msg: str, hint: str) -> None:
+        findings.append(Finding(
+            rule="CONTRACT005", path=path, line=line,
+            message=f"attack {spec.name!r}: {msg}", hint=hint))
+
+    try:
+        closure = spec.factory(AttackConfig(name=spec.name,
+                                            num_byzantine=2))
+    except Exception as e:  # the factory itself is part of the contract
+        finding(f"factory raised {type(e).__name__}: {e}",
+                "factories must accept any AttackConfig")
+        return findings
+    try:
+        params = list(inspect.signature(closure).parameters.values())
+    except (TypeError, ValueError):
+        finding("closure signature is not introspectable",
+                "return a plain function/lambda")
+        return findings
+
+    positional = [p for p in params if p.kind in
+                  (p.POSITIONAL_ONLY, p.POSITIONAL_OR_KEYWORD)]
+    if len(positional) < 2:
+        finding(f"closure takes {len(positional)} positional args; the "
+                "contract is (key, u[, step=None])",
+                "accept the PRNG key and the worker matrix")
+    if spec.step_aware:
+        step = next((p for p in positional[2:] if p.name == "step"), None)
+        if step is None or step.default is not None:
+            finding("step_aware=True but the closure lacks a third "
+                    "'step=None' parameter",
+                    "step-aware closures must accept step=None so "
+                    "matrix-level tools can call them stepless")
+    else:
+        extra = [p for p in positional[2:]
+                 if p.default is inspect.Parameter.empty]
+        if extra:
+            finding("closure requires more than (key, u) but "
+                    "step_aware=False means make_attack only passes two",
+                    "default the extra parameters or set step_aware=True")
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# Topology checks
+# ---------------------------------------------------------------------------
+
+_PARAM_READ_RE = re.compile(
+    r"topology_params(?:\.get\(\s*[\"'](\w+)[\"']|\[\s*[\"'](\w+)[\"']\])")
+
+
+def _check_topology(cls, attack_names: Iterable[str]) -> List[Finding]:
+    findings: List[Finding] = []
+    path, line = _anchor(cls)
+    name = getattr(cls, "name", cls.__name__)
+    try:
+        src = inspect.getsource(cls)
+    except (OSError, TypeError):
+        src = ""
+
+    reads = {a or b for a, b in _PARAM_READ_RE.findall(src)}
+    declared = set(cls.param_names)
+    for key in sorted(reads - declared):
+        findings.append(Finding(
+            rule="CONTRACT006", path=path, line=line,
+            message=f"topology {name!r} reads topology_params[{key!r}] "
+                    "without declaring it in param_names (spec "
+                    "validation would reject it)",
+            hint=f"add {key!r} to param_names"))
+    for key in sorted(declared - reads):
+        findings.append(Finding(
+            rule="CONTRACT006", path=path, line=line,
+            message=f"topology {name!r} declares param_names entry "
+                    f"{key!r} that run() never reads",
+            hint="drop the stale entry or consume the parameter"))
+
+    registered = set(attack_names) | {"none", ""}
+    allow = cls.attack_allowlist
+    if allow is not None:
+        for atk in allow:
+            if atk.lower() not in registered:
+                findings.append(Finding(
+                    rule="CONTRACT008", path=path, line=line,
+                    message=f"topology {name!r} allowlists unregistered "
+                            f"attack {atk!r}",
+                    hint="keep attack_allowlist entries registered"))
+    return findings
+
+
+def _check_streaming_attacks(attack_names: Iterable[str]) -> List[Finding]:
+    from repro.train import streaming
+    findings: List[Finding] = []
+    path, _ = _anchor(streaming)
+    registered = set(attack_names) | {"none", ""}
+    for atk in streaming.STREAMING_ATTACKS:
+        if atk.lower() not in registered:
+            findings.append(Finding(
+                rule="CONTRACT008", path=path, line=1,
+                message=f"STREAMING_ATTACKS names unregistered attack "
+                        f"{atk!r}",
+                hint="keep STREAMING_ATTACKS in sync with the attack "
+                     "registry"))
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# PALLAS003: live layout invariants
+# ---------------------------------------------------------------------------
+
+def _check_layout_invariants() -> List[Finding]:
+    findings: List[Finding] = []
+
+    def finding(mod, msg: str, hint: str) -> None:
+        path, _ = _anchor(mod)
+        findings.append(Finding(rule="PALLAS003", path=path, line=1,
+                                message=msg, hint=hint))
+
+    from repro.analysis.layout import LANE
+    from repro.core import selection
+    from repro.kernels import common
+    from repro.kernels.trmean import kernel as trmean_kernel
+
+    if trmean_kernel.COUNTS_LANES != LANE:
+        finding(trmean_kernel,
+                f"COUNTS_LANES={trmean_kernel.COUNTS_LANES} != the "
+                f"{LANE}-lane TPU tile the counts row packs into",
+                "COUNTS_LANES must stay 128 (one lane per worker)")
+    if common.DEFAULT_TILE_D % LANE:
+        finding(common,
+                f"DEFAULT_TILE_D={common.DEFAULT_TILE_D} is not a "
+                f"multiple of {LANE}",
+                "keep the default dim tile lane-aligned")
+    if selection._PAIRWISE_MAX_M > selection._NETWORK_MAX_M:
+        finding(selection,
+                f"_PAIRWISE_MAX_M={selection._PAIRWISE_MAX_M} exceeds "
+                f"_NETWORK_MAX_M={selection._NETWORK_MAX_M}: stable "
+                "ranks would claim fleets the sorting network rejects",
+                "keep the pairwise cap <= the network cap")
+
+    try:
+        from repro.kernels.phocas import kernel as phocas_kernel
+        if phocas_kernel.COUNTS_LANES != trmean_kernel.COUNTS_LANES:
+            finding(phocas_kernel,
+                    "phocas kernel COUNTS_LANES diverged from the "
+                    "trmean owner value",
+                    "import COUNTS_LANES from kernels/trmean/kernel.py")
+    except ImportError as e:
+        finding(trmean_kernel, f"phocas kernel not importable: {e}",
+                "keep the kernel pair in sync")
+
+    for pkg in ("trmean", "phocas", "krum"):
+        mod = f"repro.kernels.{pkg}.ref"
+        try:
+            ref = importlib.import_module(mod)
+        except ImportError as e:
+            finding(trmean_kernel,
+                    f"kernel oracle module {mod} not importable: {e}",
+                    "every kernel package ships a ref.py oracle")
+            continue
+        if not any(n.endswith("_ref") and callable(getattr(ref, n))
+                   for n in vars(ref)):
+            finding(ref, f"{mod} exports no *_ref oracle function",
+                    "name the oracle <kernel>_ref")
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# Entry points
+# ---------------------------------------------------------------------------
+
+def check_registry() -> List[Finding]:
+    """Audit every registered rule, attack, and topology + the live layout
+    invariants.  Requires the repro package importable."""
+    from repro.core import registry
+    from repro.experiment import topology as topo_mod
+
+    findings: List[Finding] = []
+    rule_names = registry.available_rules()
+    attack_names = registry.available_attacks()
+    for name in rule_names:
+        findings.extend(_check_rule(registry.get_rule(name)))
+    findings.extend(_check_streaming_sync(rule_names))
+    for name in attack_names:
+        findings.extend(_check_attack(registry.get_attack_spec(name)))
+    for name in topo_mod.available_topologies():
+        findings.extend(_check_topology(topo_mod.get_topology(name),
+                                        attack_names))
+    findings.extend(_check_streaming_attacks(attack_names))
+    findings.extend(_check_layout_invariants())
+    return findings
+
+
+def check_module(path: str) -> List[Finding]:
+    """Import one Python file and audit the plugin objects it defines
+    (AggregatorRule/Topology subclasses, AttackSpec instances) — without
+    requiring registration, so broken-contract fixtures never pollute the
+    process-wide registries."""
+    from repro.core.registry import AggregatorRule, AttackSpec
+    from repro.experiment.topology import Topology
+
+    modname = "_repro_analysis_scan_" + \
+        re.sub(r"\W", "_", os.path.abspath(path))
+    spec = importlib.util.spec_from_file_location(modname, path)
+    if spec is None or spec.loader is None:
+        return [Finding(rule="CONTRACT001", path=path, line=1,
+                        message="module not importable for contract scan",
+                        hint="pass a Python file")]
+    mod = importlib.util.module_from_spec(spec)
+    # Registered in sys.modules so inspect can anchor findings to real
+    # source lines (getsourcefile resolves classes via their module).
+    sys.modules[modname] = mod
+    try:
+        spec.loader.exec_module(mod)
+    except Exception as e:
+        del sys.modules[modname]
+        return [Finding(rule="CONTRACT001", path=path, line=1,
+                        message=f"import failed during contract scan: "
+                                f"{type(e).__name__}: {e}",
+                        hint="contract fixtures must import cleanly")]
+
+    findings: List[Finding] = []
+    attack_names = ()
+    try:
+        from repro.core import registry
+        attack_names = registry.available_attacks()
+    except Exception:
+        pass
+    for obj in vars(mod).values():
+        if isinstance(obj, type) and issubclass(obj, AggregatorRule) \
+                and obj is not AggregatorRule \
+                and obj.__module__ == modname:
+            findings.extend(_check_rule(obj))
+        elif isinstance(obj, type) and issubclass(obj, Topology) \
+                and obj is not Topology and obj.__module__ == modname:
+            findings.extend(_check_topology(obj, attack_names))
+        elif isinstance(obj, AttackSpec):
+            findings.extend(_check_attack(obj))
+    del sys.modules[modname]
+    # anchor module-scan findings to the scanned file, not the temp module
+    rebased = []
+    for f in findings:
+        if os.path.abspath(f.path) == os.path.abspath(path):
+            f = Finding(rule=f.rule, path=path, line=f.line,
+                        message=f.message, hint=f.hint,
+                        severity=f.severity)
+        rebased.append(f)
+    return rebased

@@ -1,0 +1,134 @@
+"""Finding records + the ``# repro: noqa[RULE]`` escape hatch.
+
+Every analyzer emits :class:`Finding` values — one per violation, carrying
+the rule id, severity, anchor location, message, and a fix hint.  Findings
+are machine-readable by construction: ``to_record()`` produces the dict the
+CLI prints as JSONL (compatible with ``repro.defense.telemetry``'s
+one-record-per-line format, so ``benchmarks/run.py --only analysis`` can
+trend per-rule counts across PRs).
+
+Suppression is in-band and auditable: a ``# repro: noqa[RULE1,RULE2]``
+comment on the flagged line silences exactly those rules there (a bare
+``# repro: noqa`` silences all rules on the line); anything after the
+bracket is the audit reason.  Contract findings anchor to the class/function
+definition line, so the same mechanism covers them.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, FrozenSet, List, Optional, Sequence, Tuple
+
+SEVERITIES = ("error", "warning")
+
+# Registry of every rule id: severity + one-line meaning (DESIGN.md §10).
+RULES: Dict[str, Tuple[str, str]] = {
+    "PRNG001": ("error", "PRNG key consumed more than once (or consumed "
+                         "inside a loop with the binding outside) without "
+                         "an intervening split/fold_in"),
+    "PRNG002": ("error", "jax.random.split result never used"),
+    "PRNG003": ("error", "nondeterministic Python value (hash/id/time/"
+                         "random) feeds a PRNG seed or key"),
+    "PRNG004": ("error", "constant/argless jax.random.PRNGKey in library "
+                         "code (seeds must be threaded, not baked in)"),
+    "AXIS001": ("error", "collective axis-name literal outside the "
+                         "dist/sharding.py axis vocabulary"),
+    "AXIS002": ("error", "shard_map in_specs/out_specs arity does not "
+                         "match the wrapped function"),
+    "PALLAS001": ("error", "Pallas block shape lane dimension not a "
+                           "multiple of the 128-lane tile"),
+    "PALLAS002": ("error", "kernel layout cap constant redefined outside "
+                           "its owning module"),
+    "PALLAS003": ("error", "kernel layout cap invariant violated between "
+                           "core/selection.py and kernel modules"),
+    "CONTRACT001": ("error", "emits_scores metadata inconsistent with the "
+                             "reduce_sharded_with_scores override"),
+    "CONTRACT002": ("error", "has_kernel metadata inconsistent with "
+                             "_reduce_pallas / the kernels/ module"),
+    "CONTRACT003": ("error", "supports_streaming metadata inconsistent "
+                             "with train/streaming.py's implemented rules"),
+    "CONTRACT004": ("error", "uses_b/uses_q metadata inconsistent with "
+                             "the params the rule actually reads"),
+    "CONTRACT005": ("error", "attack closure does not match the "
+                             "(key, u, step=None) signature contract"),
+    "CONTRACT006": ("error", "topology param_names does not cover the "
+                             "topology_params keys run() actually reads"),
+    "CONTRACT007": ("error", "fused_gate metadata inconsistent with the "
+                             "reduce_sharded_gated_with_scores override"),
+    "CONTRACT008": ("error", "attack_allowlist/STREAMING_ATTACKS entry "
+                             "names an unregistered attack"),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One analyzer violation (machine-readable; sorts by location)."""
+    rule: str                       # rule id, e.g. "PRNG001"
+    path: str                       # file the finding anchors to
+    line: int                       # 1-indexed anchor line
+    message: str                    # what is wrong, concretely
+    hint: str = ""                  # how to fix it (or how to noqa it)
+    severity: str = ""              # "" = the rule's registered severity
+
+    def __post_init__(self):
+        if self.rule not in RULES:
+            raise ValueError(f"unknown analysis rule id {self.rule!r}")
+        if not self.severity:
+            object.__setattr__(self, "severity", RULES[self.rule][0])
+        if self.severity not in SEVERITIES:
+            raise ValueError(f"unknown severity {self.severity!r}")
+
+    def to_record(self) -> dict:
+        """JSONL record body (telemetry-writer compatible value types)."""
+        return {"rule": self.rule, "severity": self.severity,
+                "path": self.path, "line": int(self.line),
+                "message": self.message, "hint": self.hint}
+
+    def render(self) -> str:
+        tail = f"  [fix: {self.hint}]" if self.hint else ""
+        return (f"{self.path}:{self.line}: {self.severity} "
+                f"{self.rule}: {self.message}{tail}")
+
+
+# ---------------------------------------------------------------------------
+# noqa parsing
+# ---------------------------------------------------------------------------
+
+# "# repro: noqa" | "# repro: noqa[PRNG001]" | "# repro: noqa[A,B] reason"
+_NOQA_RE = re.compile(
+    r"#\s*repro:\s*noqa(?:\[(?P<rules>[A-Z0-9_,\s]+)\])?")
+
+
+def noqa_rules_of_line(line: str) -> Optional[FrozenSet[str]]:
+    """Rules suppressed by this source line's noqa comment.
+
+    Returns None when the line carries no repro-noqa comment, an empty
+    frozenset for a bare ``# repro: noqa`` (suppress everything on the
+    line), or the frozen set of named rule ids.
+    """
+    m = _NOQA_RE.search(line)
+    if m is None:
+        return None
+    rules = m.group("rules")
+    if not rules:
+        return frozenset()
+    return frozenset(r.strip() for r in rules.split(",") if r.strip())
+
+
+def apply_noqa(findings: Sequence[Finding],
+               source_lines: Dict[str, List[str]]) -> List[Finding]:
+    """Drop findings suppressed by a noqa comment on their anchor line.
+
+    ``source_lines`` maps path -> file lines; findings for paths not in the
+    map (e.g. synthesized anchors) pass through unsuppressed.
+    """
+    kept = []
+    for f in findings:
+        lines = source_lines.get(f.path)
+        if lines is not None and 1 <= f.line <= len(lines):
+            suppressed = noqa_rules_of_line(lines[f.line - 1])
+            if suppressed is not None and (not suppressed
+                                           or f.rule in suppressed):
+                continue
+        kept.append(f)
+    return kept

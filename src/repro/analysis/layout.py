@@ -1,0 +1,101 @@
+"""Pallas layout analyzer (rules PALLAS001-PALLAS002).
+
+TPU vector memory tiles are (8, 128): a Pallas ``BlockSpec`` whose lane
+(last) dimension is not a multiple of 128 (or the scalar/column special
+case 1) wastes or breaks the tiling.  PALLAS001 checks every literal (or
+same-file-constant) block shape.
+
+The kernels also share hard caps that MUST stay in sync across modules —
+``COUNTS_LANES`` (the trmean/phocas counts kernels pack m workers into one
+128-lane row), ``_NETWORK_MAX_M``/``_PAIRWISE_MAX_M`` (sorting-network and
+stable-rank fallbacks in ``core/selection.py``), ``DEFAULT_TILE_D``.
+PALLAS002 enforces single-sourcing: each cap is assigned in exactly one
+owning module and imported everywhere else, so the caps cannot silently
+diverge between ``core/selection.py``, kernel bodies, and the ``ref.py``
+oracles.  (The numeric cross-module invariants between the live values are
+PALLAS003, checked at import time by ``repro.analysis.contracts``.)
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List
+
+from repro.analysis.astutil import (ImportTable, const_int,
+                                    module_int_constants, resolve_call)
+from repro.analysis.findings import Finding
+
+LANE = 128
+
+_BLOCKSPEC_NAMES = frozenset({
+    "jax.experimental.pallas.BlockSpec",
+    "jax.experimental.pallas.tpu.BlockSpec",
+})
+
+# Layout cap -> path suffix of the single module allowed to assign it.
+LAYOUT_CONSTANT_OWNERS: Dict[str, str] = {
+    "COUNTS_LANES": "src/repro/kernels/trmean/kernel.py",
+    "DEFAULT_TILE_D": "src/repro/kernels/common.py",
+    "_NETWORK_MAX_M": "src/repro/core/selection.py",
+    "_PAIRWISE_MAX_M": "src/repro/core/selection.py",
+}
+
+
+def analyze(path: str, tree: ast.Module) -> List[Finding]:
+    imports = ImportTable(tree)
+    consts = module_int_constants(tree)
+    findings: List[Finding] = []
+
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Call) \
+                and resolve_call(node, imports) in _BLOCKSPEC_NAMES:
+            findings.extend(_check_block_shape(path, node, consts))
+
+    findings.extend(_check_constant_owners(path, tree))
+    return findings
+
+
+def _check_block_shape(path: str, call: ast.Call,
+                       consts: Dict[str, int]) -> List[Finding]:
+    shape = None
+    if call.args:
+        shape = call.args[0]
+    for kw in call.keywords:
+        if kw.arg == "block_shape":
+            shape = kw.value
+    if not isinstance(shape, (ast.Tuple, ast.List)) or not shape.elts:
+        return []
+    lane = const_int(shape.elts[-1], consts)
+    # 1 is the scalar/column-block idiom (e.g. the krum kernel's (m, 1)
+    # score output); anything else must fill whole 128-lane tiles.
+    if lane is None or lane == 1 or lane % LANE == 0:
+        return []
+    return [Finding(
+        rule="PALLAS001", path=path, line=shape.lineno,
+        message=f"BlockSpec lane dimension {lane} is not a multiple of "
+                f"the {LANE}-lane TPU tile",
+        hint=f"pad the last block dimension to a multiple of {LANE} "
+             "(see kernels/common.pad_lanes) or use 1 for scalar blocks")]
+
+
+def _check_constant_owners(path: str, tree: ast.Module) -> List[Finding]:
+    findings: List[Finding] = []
+    norm = path.replace("\\", "/")
+    for node in tree.body:
+        targets = []
+        if isinstance(node, ast.Assign):
+            targets = node.targets
+        elif isinstance(node, ast.AnnAssign) and node.value is not None:
+            targets = [node.target]
+        for t in targets:
+            if not isinstance(t, ast.Name) \
+                    or t.id not in LAYOUT_CONSTANT_OWNERS:
+                continue
+            owner = LAYOUT_CONSTANT_OWNERS[t.id]
+            if not norm.endswith(owner):
+                findings.append(Finding(
+                    rule="PALLAS002", path=path, line=node.lineno,
+                    message=f"layout cap {t.id} is owned by {owner}; "
+                            "redefining it here lets the caps silently "
+                            "diverge",
+                    hint=f"import {t.id} from its owning module instead"))
+    return findings

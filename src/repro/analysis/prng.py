@@ -1,0 +1,418 @@
+"""PRNG-discipline analyzer (rules PRNG001-PRNG004).
+
+JAX keys are consume-once values: using the same key in two sampling calls
+(or sampling with a key that was also split) yields correlated streams, and
+a key consumed inside a loop whose binding lives outside the loop draws the
+SAME stream every iteration.  Both bugs have shipped in this repo's history
+(ISSUE 6 motivation), so the checks are deliberately conservative: only
+key expressions the analyzer can identify syntactically (``key`` /
+``keys[0]``) are tracked, ``fold_in``/``PRNGKey`` derivation calls never
+count as consumption, and sibling branches of an ``if`` never conflict.
+
+* PRNG001 — the same key expression consumed twice on one control-flow
+  path, or consumed under a loop while bound outside it.
+* PRNG002 — the result of ``jax.random.split`` is never used.
+* PRNG003 — ``hash()`` / ``id()`` / ``time.*()`` / ``random.*`` /
+  ``np.random.*`` flowing into ``PRNGKey``/``fold_in``/``seed=``
+  (PYTHONHASHSEED- or wall-clock-dependent seeding).
+* PRNG004 — argless or constant-literal ``jax.random.PRNGKey`` in library
+  code (``src/repro``): library seeds must be threaded in by callers.
+"""
+from __future__ import annotations
+
+import ast
+import copy
+import dataclasses
+from typing import Dict, List, Optional, Set, Tuple
+
+from repro.analysis.astutil import (ImportTable, assigned_names, const_int,
+                                    dotted_name, resolve_call,
+                                    walk_expr_calls)
+from repro.analysis.findings import Finding
+
+# jax.random callables that CONSUME the key passed to them.  Derivation
+# calls (fold_in, PRNGKey, key, wrap_key_data, key_data, clone) are absent
+# on purpose: deriving many streams from one key is the idiomatic pattern.
+_CONSUMERS = frozenset({
+    "ball", "bernoulli", "beta", "binomial", "bits", "categorical",
+    "cauchy", "chisquare", "choice", "dirichlet", "double_sided_maxwell",
+    "exponential", "f", "gamma", "generalized_normal", "geometric",
+    "gumbel", "laplace", "loggamma", "logistic", "lognormal", "maxwell",
+    "multivariate_normal", "normal", "orthogonal", "pareto", "permutation",
+    "poisson", "rademacher", "randint", "rayleigh", "split", "t",
+    "triangular", "truncated_normal", "uniform", "wald", "weibull_min",
+})
+
+_KEY_MAKERS = frozenset({"jax.random.PRNGKey", "jax.random.key"})
+_SEED_FEEDERS = _KEY_MAKERS | frozenset({"jax.random.fold_in"})
+
+# Nondeterministic sources that must never feed a seed (PRNG003).
+_TIME_FNS = frozenset({"time.time", "time.time_ns", "time.monotonic",
+                       "time.monotonic_ns", "time.perf_counter",
+                       "time.perf_counter_ns"})
+
+
+def _consumer_name(resolved: Optional[str]) -> Optional[str]:
+    """The jax.random sampler name when ``resolved`` is a key consumer."""
+    if resolved is None:
+        return None
+    if resolved.startswith("jax.random."):
+        tail = resolved[len("jax.random."):]
+        if tail in _CONSUMERS:
+            return tail
+    return None
+
+
+def _key_expr_id(expr: ast.expr) -> Optional[str]:
+    """Trackable identity of a key expression: ``name`` or ``name[3]``.
+
+    Dynamic expressions (``keys[i]``, ``fold_in(key, x)``, attributes)
+    return None and are skipped — per-iteration derivation is exactly the
+    correct idiom, and variable subscripts cannot be compared statically.
+    """
+    if isinstance(expr, ast.Name):
+        return expr.id
+    if isinstance(expr, ast.Subscript) and isinstance(expr.value, ast.Name):
+        idx = const_int(expr.slice)
+        if idx is not None:
+            return f"{expr.value.id}[{idx}]"
+    return None
+
+
+@dataclasses.dataclass
+class _KeyState:
+    """Liveness of one key id inside a scope walk."""
+    consumed_line: Optional[int]    # last live consumption (None = fresh)
+    bind_depth: int                 # loop depth where last bound/reset
+
+
+class _ScopeWalker:
+    """Walks one function (or the module top level) tracking key liveness."""
+
+    def __init__(self, analyzer: "_PrngAnalyzer", params: List[str]):
+        self.a = analyzer
+        self.state: Dict[str, _KeyState] = {
+            p: _KeyState(None, 0) for p in params}
+        self.depth = 0
+        self.loop_rebinds: List[Set[str]] = []
+        self.reported: Set[Tuple[str, int]] = set()
+
+    # -- state helpers ----------------------------------------------------
+
+    def _bind(self, name: str) -> None:
+        # Rebinding a name resets the whole family: ``ks = split(key, 4)``
+        # invalidates any tracked ``ks[0]`` / ``ks[1]`` entries too.
+        self.state[name] = _KeyState(None, self.depth)
+        for k in [k for k in self.state if k.startswith(f"{name}[")]:
+            self.state[k] = _KeyState(None, self.depth)
+
+    def _consume(self, key_id: str, line: int, fn: str) -> None:
+        st = self.state.get(key_id)
+        if st is None:
+            st = _KeyState(None, 0)
+            self.state[key_id] = st
+        if st.consumed_line is not None:
+            self._report(key_id, line,
+                         f"key {key_id!r} already consumed on line "
+                         f"{st.consumed_line} is consumed again by "
+                         f"jax.random.{fn}")
+        elif self.depth > st.bind_depth \
+                and not self._rebound_in_loop(key_id):
+            self._report(key_id, line,
+                         f"key {key_id!r} bound outside this loop is "
+                         f"consumed by jax.random.{fn} every iteration "
+                         "(identical stream each pass)")
+        st.consumed_line = line
+
+    def _rebound_in_loop(self, key_id: str) -> bool:
+        """Is the key's base name rebound somewhere in an enclosing loop
+        body?  ``key, sk = jax.random.split(key)`` inside the loop is the
+        idiomatic advance — later iterations consume a fresh binding, so
+        the every-iteration-identical-stream report does not apply."""
+        base = key_id.split("[", 1)[0]
+        return any(base in bound for bound in self.loop_rebinds)
+
+    def _report(self, key_id: str, line: int, msg: str) -> None:
+        if (key_id, line) in self.reported:
+            return
+        self.reported.add((key_id, line))
+        self.a.findings.append(Finding(
+            rule="PRNG001", path=self.a.path, line=line, message=msg,
+            hint="split or fold_in the key per use (new_key, sub = "
+                 "jax.random.split(key)), or fold in the loop index"))
+
+    # -- statement walking ------------------------------------------------
+
+    def walk_block(self, stmts: List[ast.stmt]) -> None:
+        for stmt in stmts:
+            self.walk_stmt(stmt)
+
+    def walk_stmt(self, stmt: ast.stmt) -> None:
+        if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.ClassDef)):
+            return                       # separate scope, analyzed apart
+        if isinstance(stmt, (ast.Assign, ast.AugAssign, ast.AnnAssign)):
+            self._scan_calls(stmt)
+            targets = stmt.targets if isinstance(stmt, ast.Assign) \
+                else [stmt.target]
+            for t in targets:
+                for name in assigned_names(t):
+                    self._bind(name)
+            return
+        if isinstance(stmt, ast.If):
+            self._scan_calls_expr(stmt.test)
+            self._walk_branches([stmt.body, stmt.orelse])
+            return
+        if isinstance(stmt, (ast.For, ast.AsyncFor)):
+            self._scan_calls_expr(stmt.iter)
+            self.depth += 1
+            self.loop_rebinds.append(_names_bound_in(stmt.body))
+            for name in assigned_names(stmt.target):
+                self._bind(name)
+            self.walk_block(stmt.body)
+            self.loop_rebinds.pop()
+            self.depth -= 1
+            self.walk_block(stmt.orelse)
+            return
+        if isinstance(stmt, ast.While):
+            self._scan_calls_expr(stmt.test)
+            self.depth += 1
+            self.loop_rebinds.append(_names_bound_in(stmt.body))
+            self.walk_block(stmt.body)
+            self.loop_rebinds.pop()
+            self.depth -= 1
+            self.walk_block(stmt.orelse)
+            return
+        if isinstance(stmt, ast.Try):
+            self.walk_block(stmt.body)
+            for h in stmt.handlers:
+                self.walk_block(h.body)
+            self.walk_block(stmt.orelse)
+            self.walk_block(stmt.finalbody)
+            return
+        if isinstance(stmt, (ast.With, ast.AsyncWith)):
+            for item in stmt.items:
+                self._scan_calls_expr(item.context_expr)
+                if item.optional_vars is not None:
+                    for name in assigned_names(item.optional_vars):
+                        self._bind(name)
+            self.walk_block(stmt.body)
+            return
+        self._scan_calls(stmt)
+
+    def _walk_branches(self, blocks: List[List[ast.stmt]]) -> None:
+        """Walk if/else arms on copies; merge survivors conservatively."""
+        base = copy.deepcopy(self.state)
+        merged: Dict[str, _KeyState] = dict(base)
+        for block in blocks:
+            self.state = copy.deepcopy(base)
+            self.walk_block(block)
+            if not _terminates(block):
+                for k, st in self.state.items():
+                    prev = merged.get(k)
+                    # prefer a live consumption from any surviving arm
+                    if prev is None or (st.consumed_line is not None
+                                        and prev.consumed_line is None):
+                        merged[k] = st
+        self.state = merged
+
+    # -- expression scanning ----------------------------------------------
+
+    def _scan_calls(self, stmt: ast.stmt) -> None:
+        for call in walk_expr_calls(stmt):
+            self._handle_call(call)
+
+    def _scan_calls_expr(self, expr: ast.expr) -> None:
+        for call in walk_expr_calls(expr):
+            self._handle_call(call)
+
+    def _handle_call(self, call: ast.Call) -> None:
+        fn = _consumer_name(resolve_call(call, self.a.imports))
+        if fn is None or not call.args:
+            return
+        key_id = _key_expr_id(call.args[0])
+        if key_id is None:
+            return
+        self._consume(key_id, call.lineno, fn)
+
+
+def _names_bound_in(stmts: List[ast.stmt]) -> Set[str]:
+    """Names (re)bound anywhere in a statement block, nested scopes
+    excluded (a nested def's assignments bind in ITS scope, not here)."""
+    bound: Set[str] = set()
+
+    def visit(node: ast.AST) -> None:
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.ClassDef, ast.Lambda)):
+            return
+        if isinstance(node, (ast.Assign,)):
+            for t in node.targets:
+                bound.update(assigned_names(t))
+        elif isinstance(node, (ast.AugAssign, ast.AnnAssign)):
+            bound.update(assigned_names(node.target))
+        elif isinstance(node, (ast.For, ast.AsyncFor)):
+            bound.update(assigned_names(node.target))
+        elif isinstance(node, ast.NamedExpr):
+            bound.update(assigned_names(node.target))
+        elif isinstance(node, (ast.With, ast.AsyncWith)):
+            for item in node.items:
+                if item.optional_vars is not None:
+                    bound.update(assigned_names(item.optional_vars))
+        for child in ast.iter_child_nodes(node):
+            visit(child)
+
+    for stmt in stmts:
+        visit(stmt)
+    return bound
+
+
+def _terminates(block: List[ast.stmt]) -> bool:
+    """Does this block always leave the surrounding statement stream?"""
+    return bool(block) and isinstance(
+        block[-1], (ast.Return, ast.Raise, ast.Continue, ast.Break))
+
+
+class _PrngAnalyzer:
+    def __init__(self, path: str, tree: ast.Module, imports: ImportTable,
+                 library_code: bool):
+        self.path = path
+        self.tree = tree
+        self.imports = imports
+        self.library_code = library_code
+        self.findings: List[Finding] = []
+
+    def run(self) -> List[Finding]:
+        self._check_scope(self.tree, params=[])
+        for node in ast.walk(self.tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                args = node.args
+                params = [a.arg for a in (args.posonlyargs + args.args
+                                          + args.kwonlyargs)]
+                self._check_scope(node, params=params)
+            elif isinstance(node, ast.Lambda):
+                self._check_lambda(node)
+        for call in (c for n in ast.walk(self.tree)
+                     for c in ([n] if isinstance(n, ast.Call) else [])):
+            self._check_seed_sources(call)
+            self._check_constant_key(call)
+        return self.findings
+
+    # -- PRNG001 ----------------------------------------------------------
+
+    def _check_scope(self, scope, params: List[str]) -> None:
+        walker = _ScopeWalker(self, params)
+        walker.walk_block(scope.body)
+        self._check_dead_splits(scope)
+
+    def _check_lambda(self, node: ast.Lambda) -> None:
+        # A lambda body is one expression: flag a key consumed twice in it.
+        walker = _ScopeWalker(self, [a.arg for a in node.args.args])
+        for call in walk_expr_calls(node.body):
+            walker._handle_call(call)
+
+    # -- PRNG002 ----------------------------------------------------------
+
+    def _check_dead_splits(self, scope) -> None:
+        loaded: Set[str] = set()
+        for node in ast.walk(scope):
+            if isinstance(node, ast.Name) and isinstance(node.ctx, ast.Load):
+                loaded.add(node.id)
+
+        for stmt in self._scope_stmts(scope):
+            if isinstance(stmt, ast.Expr) and self._is_split(stmt.value):
+                self.findings.append(Finding(
+                    rule="PRNG002", path=self.path, line=stmt.lineno,
+                    message="jax.random.split result is discarded",
+                    hint="bind and use the subkeys, or delete the call"))
+            elif isinstance(stmt, ast.Assign) and self._is_split(stmt.value):
+                dead = [n for t in stmt.targets for n in assigned_names(t)
+                        if n != "_" and n not in loaded]
+                for name in dead:
+                    self.findings.append(Finding(
+                        rule="PRNG002", path=self.path, line=stmt.lineno,
+                        message=f"split result {name!r} is never used",
+                        hint="consume the subkey or drop it from the "
+                             "split (dead splits usually mean a stream "
+                             "was meant to be used)"))
+
+    def _scope_stmts(self, scope):
+        """Statements belonging to this scope only (no nested functions)."""
+        stack = list(scope.body)
+        while stack:
+            stmt = stack.pop(0)
+            if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                 ast.ClassDef)):
+                continue
+            yield stmt
+            for field in ("body", "orelse", "finalbody"):
+                stack.extend(getattr(stmt, field, []) or [])
+            for h in getattr(stmt, "handlers", []) or []:
+                stack.extend(h.body)
+
+    def _is_split(self, expr: ast.expr) -> bool:
+        return (isinstance(expr, ast.Call)
+                and resolve_call(expr, self.imports) == "jax.random.split")
+
+    # -- PRNG003 ----------------------------------------------------------
+
+    def _check_seed_sources(self, call: ast.Call) -> None:
+        resolved = resolve_call(call, self.imports)
+        seed_exprs: List[ast.expr] = []
+        if resolved in _SEED_FEEDERS:
+            seed_exprs.extend(call.args)
+            seed_exprs.extend(kw.value for kw in call.keywords)
+        else:
+            seed_exprs.extend(kw.value for kw in call.keywords
+                              if kw.arg == "seed")
+        for expr in seed_exprs:
+            bad = self._nondeterministic_source(expr)
+            if bad is not None:
+                self.findings.append(Finding(
+                    rule="PRNG003", path=self.path, line=expr.lineno,
+                    message=f"nondeterministic {bad} feeds a PRNG "
+                            "seed/key (varies per process/run)",
+                    hint="derive the value from stable data instead "
+                         "(e.g. zlib.crc32 of a path string, or a "
+                         "threaded seed)"))
+
+    def _nondeterministic_source(self, expr: ast.expr) -> Optional[str]:
+        for call in [n for n in ast.walk(expr) if isinstance(n, ast.Call)]:
+            name = dotted_name(call.func)
+            if name in ("hash", "id"):
+                return f"{name}()"
+            if name is None:
+                continue
+            resolved = self.imports.expand(name)
+            if resolved in _TIME_FNS:
+                return f"{resolved}()"
+            if resolved.startswith("random.") \
+                    or resolved.startswith("numpy.random."):
+                return f"{resolved}()"
+        return None
+
+    # -- PRNG004 ----------------------------------------------------------
+
+    def _check_constant_key(self, call: ast.Call) -> None:
+        if not self.library_code:
+            return
+        if resolve_call(call, self.imports) not in _KEY_MAKERS:
+            return
+        if not call.args and not call.keywords:
+            self.findings.append(Finding(
+                rule="PRNG004", path=self.path, line=call.lineno,
+                message="argless jax.random.PRNGKey in library code",
+                hint="thread the seed in from the caller"))
+        elif len(call.args) == 1 and not call.keywords \
+                and const_int(call.args[0]) is not None:
+            self.findings.append(Finding(
+                rule="PRNG004", path=self.path, line=call.lineno,
+                message="constant-literal jax.random.PRNGKey("
+                        f"{const_int(call.args[0])}) in library code",
+                hint="thread the seed in from the caller (tests and "
+                     "scripts may hard-code seeds; library code may not)"))
+
+
+def analyze(path: str, tree: ast.Module, *, library_code: bool
+            ) -> List[Finding]:
+    """Run the PRNG-discipline rules over one parsed file."""
+    return _PrngAnalyzer(path, tree, ImportTable(tree), library_code).run()

@@ -198,6 +198,48 @@ def krum_scores_sharded(mat: jax.Array, q: int,
     return jnp.sum(nearest, axis=1)
 
 
+def krum_gated_scores_sharded(mat: jax.Array, active: jax.Array, q: int,
+                              psum_axes: Sequence[str]
+                              ) -> Tuple[jax.Array, jax.Array]:
+    """Raw AND reputation-gated Krum score sums from ONE Gram pass.
+
+    The gated matrix A replaces ejected rows with the raw median row
+    ``med`` (:func:`selection.gate_matrix`), so its pairwise squared
+    distances are recoverable from the raw distances plus each row's
+    distance to ``med``::
+
+        d2_A(i, j) = a_i a_j d2(i, j) + a_i (1 - a_j) e_i
+                                      + (1 - a_i) a_j e_j
+
+    where ``e_i = ||mat_i - med||^2`` (and both-ejected pairs are 0).
+    That turns the defense path's second O(m^2 d) Gram into an O(m d)
+    correction — the one-pass ``fused_gate`` route the registry metadata
+    advertises — and both score vectors share one collective: ``d2`` and
+    ``e`` psum together as a single (m+1, m) block.
+    """
+    from repro.dist.collectives import psum_axes as _psum
+    m = mat.shape[0]
+    k = m - q - 2
+    if k <= 0:
+        raise ValueError(f"Krum requires m - q - 2 > 0 (m={m}, q={q})")
+    sq = jnp.sum(mat * mat, axis=1)
+    gram = mat @ mat.T
+    d2 = jnp.maximum(sq[:, None] + sq[None, :] - 2.0 * gram, 0.0)
+    med = selection.matrix_median(mat)
+    e = jnp.sum((mat - med[None]) ** 2, axis=1)
+    block = _psum(jnp.concatenate([d2, e[None, :]], axis=0),
+                  tuple(psum_axes))
+    d2, e = block[:m], block[m]
+    a = active.astype(d2.dtype)
+    d2_gated = (a[:, None] * a[None, :] * d2
+                + a[:, None] * (1.0 - a[None, :]) * e[:, None]
+                + (1.0 - a[:, None]) * a[None, :] * e[None, :])
+    inf_diag = jnp.diag(jnp.full((m,), jnp.inf, d2.dtype))
+    raw = jnp.sum(jnp.sort(d2 + inf_diag, axis=1)[:, :k], axis=1)
+    gated = jnp.sum(jnp.sort(d2_gated + inf_diag, axis=1)[:, :k], axis=1)
+    return raw, gated
+
+
 # Pre-Weiszfeld row clipping: rows whose norm exceeds this multiple of the
 # median row norm are rescaled onto that cap.  Under the omniscient attack's
 # 1e20 blow-up the un-clipped fixed point cannot localize in a small fixed
@@ -290,6 +332,7 @@ class _TrimFamilyRule(AggregatorRule):
     family, so they live here once.
     """
     trim_kind: str = ""
+    fused_gate = True
 
     def _baseline(self, m: int) -> float:
         raise NotImplementedError
@@ -389,6 +432,7 @@ class KrumRule(AggregatorRule):
     uses_q = True
     has_kernel = True
     emits_scores = True
+    fused_gate = True
 
     def _reduce_xla(self, u):
         return krum(u, self.params.q)
@@ -405,6 +449,14 @@ class KrumRule(AggregatorRule):
         raw = krum_scores_sharded(mat, self.params.q, psum_axes)
         return mat[jnp.argmin(raw)], distance_ratio_scores(raw)
 
+    def reduce_sharded_gated_with_scores(self, mat, active, psum_axes):
+        if active is None:
+            return self.reduce_sharded_with_scores(mat, psum_axes)
+        raw, gated = krum_gated_scores_sharded(mat, active, self.params.q,
+                                               psum_axes)
+        pick = selection.gate_matrix(mat, active)[jnp.argmin(gated)]
+        return pick, distance_ratio_scores(raw)
+
 
 @register_rule
 class MultikrumRule(AggregatorRule):
@@ -415,6 +467,7 @@ class MultikrumRule(AggregatorRule):
     uses_q = True
     has_kernel = True
     emits_scores = True
+    fused_gate = True
 
     def _k(self, m: int) -> int:
         k = self.params.multikrum_k
@@ -437,6 +490,15 @@ class MultikrumRule(AggregatorRule):
         _, idx = jax.lax.top_k(-raw, self._k(mat.shape[0]))
         return jnp.mean(mat[idx], axis=0), distance_ratio_scores(raw)
 
+    def reduce_sharded_gated_with_scores(self, mat, active, psum_axes):
+        if active is None:
+            return self.reduce_sharded_with_scores(mat, psum_axes)
+        raw, gated = krum_gated_scores_sharded(mat, active, self.params.q,
+                                               psum_axes)
+        _, idx = jax.lax.top_k(-gated, self._k(mat.shape[0]))
+        agg = jnp.mean(selection.gate_matrix(mat, active)[idx], axis=0)
+        return agg, distance_ratio_scores(raw)
+
 
 @register_rule
 class GeomedianRule(AggregatorRule):
@@ -445,6 +507,7 @@ class GeomedianRule(AggregatorRule):
     coordinate_wise = False
     resilience = "classic"
     emits_scores = True
+    fused_gate = True
 
     def _reduce_xla(self, u):
         return geomedian(u, iters=self.params.geomedian_iters)
@@ -459,6 +522,22 @@ class GeomedianRule(AggregatorRule):
                                      iters=self.params.geomedian_iters,
                                      with_dists=True)
         return z, distance_ratio_scores(dists)
+
+    def reduce_sharded_gated_with_scores(self, mat, active, psum_axes):
+        """One Weiszfeld run instead of the composed path's two.
+
+        The center comes from the gated matrix; the scores are the RAW
+        rows' distances to that defended center (the flap-prevention
+        invariant — scores observe raw submissions — holds, measured
+        against the center the update actually uses).
+        """
+        if active is None:
+            return self.reduce_sharded_with_scores(mat, psum_axes)
+        from repro.dist.collectives import psum_axes as _psum
+        z = geomedian_sharded(selection.gate_matrix(mat, active), psum_axes,
+                              iters=self.params.geomedian_iters)
+        d2 = _psum(jnp.sum((mat - z[None]) ** 2, axis=1), tuple(psum_axes))
+        return z, distance_ratio_scores(jnp.sqrt(d2))
 
 
 # ---------------------------------------------------------------------------

@@ -85,6 +85,11 @@ class AggregatorRule:
     has_kernel: ClassVar[bool] = False    # declares a Pallas _reduce_pallas
     supports_streaming: ClassVar[bool] = False  # train/streaming.py scan mode
     emits_scores: ClassVar[bool] = False  # informative reduce_with_scores
+    fused_gate: ClassVar[bool] = False    # one-pass gated override (the
+    # defense path may call reduce_sharded_gated_with_scores every step;
+    # False means the base two-pass composition runs — correct but ~2x,
+    # and for the vector-wise rules BENCH_agg_scaling showed 1.4-2.6x —
+    # so rules keep this honest and repro.analysis CONTRACT007 checks it)
 
     def __init__(self, params: RuleParams = RuleParams()):
         self.params = params
@@ -293,6 +298,11 @@ def streaming_rules() -> Tuple[str, ...]:
 def score_rules() -> Tuple[str, ...]:
     """Rules whose ``reduce_with_scores`` emits informative suspicion."""
     return tuple(n for n in available_rules() if _RULES[n].emits_scores)
+
+
+def fused_gate_rules() -> Tuple[str, ...]:
+    """Rules whose gated defense hook is a genuine one-pass override."""
+    return tuple(n for n in available_rules() if _RULES[n].fused_gate)
 
 
 def robust_rules() -> Tuple[str, ...]:

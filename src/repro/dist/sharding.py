@@ -30,6 +30,14 @@ from jax.sharding import Mesh, PartitionSpec as P
 # (data-parallel) axis.  Order within each role follows mesh.axis_names.
 MODEL_AXIS_NAMES = frozenset({"model", "tensor", "tp", "mp"})
 
+# Worker-role axis names the meshes in this repo actually use.
+WORKER_AXIS_NAMES = frozenset({"data", "pod"})
+
+# The complete mesh-axis vocabulary.  ``repro.analysis`` (rule AXIS001)
+# pins every collective's axis-name literal to this set, so a new axis
+# role must be added HERE before any psum/all_gather can name it.
+AXIS_VOCAB = MODEL_AXIS_NAMES | WORKER_AXIS_NAMES
+
 
 def worker_axes_of(mesh: Mesh) -> Tuple[str, ...]:
     """Mesh axes playing the paper's worker role, e.g. ``("data",)`` or

@@ -71,7 +71,9 @@ def build_lowerable(arch: str, shape_name: str, mesh, *, layout: str,
 
     from repro.dist.sharding import param_pspec_fsdp
     leaf_rule = param_pspec_fsdp if mode == "streaming" else None
-    params_shapes = jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
+    params_shapes = jax.eval_shape(
+        # eval_shape is abstract: only shapes flow out, no value is drawn
+        lambda: model.init(jax.random.PRNGKey(0)))  # repro: noqa[PRNG004]
     pspecs = (tree_pspecs(params_shapes, mesh, leaf_rule=leaf_rule)
               if leaf_rule else tree_pspecs(params_shapes, mesh))
     params_sds = _with_sharding(params_shapes, pspecs, mesh)

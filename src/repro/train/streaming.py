@@ -46,6 +46,11 @@ from repro.optim.optimizers import OptConfig, apply_updates
 STREAMING_ATTACKS = ("none", "gaussian", "signflip", "zero", "bitflip",
                      "gambler")
 
+# Rules make_streaming_train_step actually has a streaming formulation
+# for.  Must stay in bijection with the registry's supports_streaming
+# metadata — rule CONTRACT003 of ``repro.analysis`` checks both ways.
+STREAMING_IMPL_RULES = ("mean", "trmean", "phocas")
+
 
 def _path_salt(path) -> int:
     """Deterministic 31-bit fold-in salt from a leaf's tree path.
@@ -67,10 +72,15 @@ def _worker_attack(cfg: AttackConfig, g, widx, key, center=None):
     q = cfg.num_byzantine
 
     if name == "gaussian":
+        # Salt by leaf path AND worker index: without the widx fold every
+        # Byzantine worker drew the SAME noise vector, making the q rows
+        # collinear — a much weaker adversary than the matrix-mode attack,
+        # which draws (q, d) independent noise (repro.analysis audit).
         def leaf(path, x):
             noise = cfg.gaussian_std * jax.random.normal(
-                jax.random.fold_in(key, _path_salt(path)), x.shape,
-                jnp.float32)
+                jax.random.fold_in(
+                    jax.random.fold_in(key, _path_salt(path)), widx),
+                x.shape, jnp.float32)
             return jnp.where(widx < q, noise.astype(x.dtype), x)
         return jax.tree_util.tree_map_with_path(leaf, g)
     if name == "signflip":

@@ -1,0 +1,16 @@
+"""Clean twin of axis001_violation.py: vocabulary names and dynamic axis
+expressions produce no findings."""
+import jax
+
+
+def vocab_axes(x):
+    y = jax.lax.psum(x, "data")
+    return jax.lax.all_gather(y, axis_name="model")
+
+
+def multi_axis(x):
+    return jax.lax.psum(x, ("pod", "data"))
+
+
+def dynamic_axis(x, axes):
+    return jax.lax.psum(x, axes)             # not statically checkable

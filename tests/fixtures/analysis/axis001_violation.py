@@ -1,0 +1,14 @@
+"""Seeded AXIS001 violations: axis literals outside the vocabulary."""
+import jax
+
+
+def typo_axis(x):
+    return jax.lax.psum(x, "dta")            # VIOLATION AXIS001 line 6
+
+
+def unknown_role(x):
+    return jax.lax.all_gather(x, axis_name="replica")  # VIOLATION AXIS001
+
+
+def tuple_mix(x):
+    return jax.lax.psum(x, ("data", "podd"))  # VIOLATION AXIS001 line 14

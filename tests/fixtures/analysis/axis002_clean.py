@@ -1,0 +1,21 @@
+"""Clean twin of axis002_violation.py."""
+import jax
+from jax.sharding import PartitionSpec as P
+
+
+def agg_fn(mat, key):
+    return mat.sum(axis=0), key
+
+
+def correct_specs(mesh, mat, key):
+    f = jax.shard_map(
+        agg_fn, mesh=mesh,
+        in_specs=(P("data"), P()),
+        out_specs=(P(), P()))
+    return f(mat, key)
+
+
+def dynamic_wrapped(mesh, fn, mat):
+    # Non-Name callee / dynamic specs are not statically checkable.
+    return jax.shard_map(fn, mesh=mesh, in_specs=(P("data"),),
+                         out_specs=P())(mat)

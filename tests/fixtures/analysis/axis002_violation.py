@@ -1,0 +1,23 @@
+"""Seeded AXIS002 violations: shard_map spec arity mismatches."""
+import jax
+from jax.sharding import PartitionSpec as P
+
+
+def agg_fn(mat, key):
+    return mat.sum(axis=0), key
+
+
+def wrong_in_specs(mesh, mat, key):
+    f = jax.shard_map(                       # VIOLATION AXIS002 line 11
+        agg_fn, mesh=mesh,
+        in_specs=(P("data"),),               # agg_fn takes 2 args
+        out_specs=(P(), P()))
+    return f(mat, key)
+
+
+def wrong_out_specs(mesh, mat, key):
+    f = jax.shard_map(                       # VIOLATION AXIS002 line 19
+        agg_fn, mesh=mesh,
+        in_specs=(P("data"), P()),
+        out_specs=(P(),))                    # agg_fn returns 2 values
+    return f(mat, key)

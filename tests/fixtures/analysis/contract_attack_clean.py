@@ -1,0 +1,18 @@
+"""Clean twin of contract_attack_violations.py."""
+from repro.core.registry import AttackSpec
+
+
+def _plain_factory(cfg):
+    return lambda key, u: u
+
+
+def _step_aware_factory(cfg):
+    return lambda key, u, step=None: u
+
+
+good_plain = AttackSpec(
+    name="fx_plain", factory=_plain_factory, kind="classic")
+
+good_step_aware = AttackSpec(
+    name="fx_step_aware", factory=_step_aware_factory, kind="adaptive",
+    step_aware=True)

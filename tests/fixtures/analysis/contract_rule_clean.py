@@ -1,0 +1,27 @@
+"""Clean twin of contract_rule_violations.py: metadata that matches the
+implementation produces zero findings under check_module."""
+from repro.core.registry import AggregatorRule
+
+
+class PlainClean(AggregatorRule):
+    name = "fx_plain_clean"
+
+    def _reduce_xla(self, u):
+        return u.mean(axis=0)
+
+
+class ScoredClean(AggregatorRule):
+    name = "fx_scored_clean"
+    emits_scores = True
+    uses_b = True
+    fused_gate = True
+
+    def _reduce_xla(self, u):
+        b = self.params.b
+        return u[b:].mean(axis=0)
+
+    def reduce_sharded_with_scores(self, mat, psum_axes):
+        return mat.mean(axis=0), mat.sum(axis=1)
+
+    def reduce_sharded_gated_with_scores(self, mat, active, psum_axes):
+        return mat.mean(axis=0), mat.sum(axis=1)

@@ -1,0 +1,90 @@
+"""Seeded rule-metadata contract violations (CONTRACT001-004, 007).
+
+One deliberately-broken AggregatorRule subclass per rule id, NOT
+registered (no ``@register_rule``) so scanning never pollutes the
+process-wide registry.  tests/test_analysis.py runs ``check_module`` over
+this file and asserts each class line is flagged with its rule id.
+"""
+from repro.core.registry import AggregatorRule
+
+
+class ScoresWithoutHook(AggregatorRule):     # VIOLATION CONTRACT001
+    name = "fx_scores_without_hook"
+    emits_scores = True                      # ...but no override below
+
+    def _reduce_xla(self, u):
+        return u.mean(axis=0)
+
+
+class HookWithoutScores(AggregatorRule):     # VIOLATION CONTRACT001
+    name = "fx_hook_without_scores"
+    emits_scores = False
+
+    def _reduce_xla(self, u):
+        return u.mean(axis=0)
+
+    def reduce_sharded_with_scores(self, mat, psum_axes):
+        return mat.mean(axis=0), mat.sum(axis=1)
+
+
+class KernelWithoutPallas(AggregatorRule):   # VIOLATION CONTRACT002
+    name = "fx_kernel_without_pallas"
+    has_kernel = True                        # ...but no _reduce_pallas
+
+    def _reduce_xla(self, u):
+        return u.mean(axis=0)
+
+
+class KernelBadDispatch(AggregatorRule):     # VIOLATION CONTRACT002
+    name = "fx_kernel_bad_dispatch"
+    has_kernel = True
+
+    def _reduce_xla(self, u):
+        return u.mean(axis=0)
+
+    def _reduce_pallas(self, u):
+        from repro.kernels.nonexistent.ops import reduce as k
+        return k(u)
+
+
+class StreamingUnimplemented(AggregatorRule):  # VIOLATION CONTRACT003
+    name = "fx_streaming_unimplemented"
+    supports_streaming = True                # not in STREAMING_IMPL_RULES
+
+    def _reduce_xla(self, u):
+        return u.mean(axis=0)
+
+
+class DeclaresUnreadB(AggregatorRule):       # VIOLATION CONTRACT004
+    name = "fx_declares_unread_b"
+    uses_b = True                            # never reads params.b
+
+    def _reduce_xla(self, u):
+        return u.mean(axis=0)
+
+
+class ReadsUndeclaredQ(AggregatorRule):      # VIOLATION CONTRACT004
+    name = "fx_reads_undeclared_q"
+    uses_q = False
+
+    def _reduce_xla(self, u):
+        return u[self.params.q:].mean(axis=0)
+
+
+class FusedGateUnfused(AggregatorRule):      # VIOLATION CONTRACT007
+    name = "fx_fused_gate_unfused"
+    fused_gate = True                        # base two-pass composition
+
+    def _reduce_xla(self, u):
+        return u.mean(axis=0)
+
+
+class FusedWithoutFlag(AggregatorRule):      # VIOLATION CONTRACT007
+    name = "fx_fused_without_flag"
+    fused_gate = False
+
+    def _reduce_xla(self, u):
+        return u.mean(axis=0)
+
+    def reduce_sharded_gated_with_scores(self, mat, active, psum_axes):
+        return mat.mean(axis=0), mat.sum(axis=1)

@@ -1,0 +1,13 @@
+"""Clean twin of contract_topology_violations.py."""
+from repro.experiment.topology import Topology
+
+
+class MatchedParams(Topology):
+    name = "fx_matched_params"
+    param_names = ("staleness", "update_clip")
+    attack_allowlist = ("gaussian", "signflip")
+
+    def run(self, plan, init_state=None):
+        staleness = plan.spec.topology_params.get("staleness", 2)
+        clip = plan.spec.topology_params["update_clip"]
+        return staleness, clip

@@ -1,0 +1,27 @@
+"""Seeded topology contract violations (CONTRACT006, CONTRACT008)."""
+from repro.experiment.topology import Topology
+
+
+class ReadsUndeclaredParam(Topology):        # VIOLATION CONTRACT006
+    name = "fx_reads_undeclared"
+    param_names = ()
+
+    def run(self, plan, init_state=None):
+        staleness = plan.spec.topology_params.get("staleness", 2)
+        return staleness
+
+
+class DeclaresUnreadParam(Topology):         # VIOLATION CONTRACT006
+    name = "fx_declares_unread"
+    param_names = ("ghost_knob",)
+
+    def run(self, plan, init_state=None):
+        return None
+
+
+class AllowsUnknownAttack(Topology):         # VIOLATION CONTRACT008
+    name = "fx_allows_unknown_attack"
+    attack_allowlist = ("gaussian", "fx_not_an_attack")
+
+    def run(self, plan, init_state=None):
+        return None

@@ -1,0 +1,20 @@
+"""noqa escape-hatch fixture: each suppression style, plus one live
+violation proving a mismatched rule id does NOT suppress."""
+import jax
+
+
+def targeted(key):
+    a = jax.random.normal(key, (4,))
+    b = jax.random.uniform(key, (4,))  # repro: noqa[PRNG001] corpus demo
+    return a + b
+
+
+def bare(key):
+    jax.random.split(key)  # repro: noqa
+    return 0.0
+
+
+def wrong_rule(key):
+    a = jax.random.normal(key, (4,))
+    b = jax.random.uniform(key, (4,))  # repro: noqa[PRNG002] VIOLATION PRNG001
+    return a + b

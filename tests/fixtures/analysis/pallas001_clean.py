@@ -1,0 +1,21 @@
+"""Clean twin of pallas001_violation.py: multiples of 128, the scalar/
+column idiom (lane == 1), and dynamic lanes all pass."""
+from jax.experimental import pallas as pl
+
+TILE = 256
+
+
+def aligned_lane(m):
+    return pl.BlockSpec((m, 128), lambda i: (0, i))
+
+
+def aligned_constant(m):
+    return pl.BlockSpec(block_shape=(m, TILE), index_map=lambda i: (0, i))
+
+
+def scalar_column(m):
+    return pl.BlockSpec((m, 1), lambda i: (0, i))
+
+
+def dynamic_lane(m, tile_d):
+    return pl.BlockSpec((m, tile_d), lambda i: (0, i))

@@ -1,0 +1,13 @@
+"""Seeded PALLAS001 violations: lane dims off the 128-lane tile."""
+from jax.experimental import pallas as pl
+
+TILE = 96
+
+
+def bad_literal_lane(m):
+    return pl.BlockSpec((m, 100), lambda i: (0, i))  # VIOLATION PALLAS001
+
+
+def bad_constant_lane(m):
+    return pl.BlockSpec(block_shape=(m, TILE),       # VIOLATION PALLAS001
+                        index_map=lambda i: (0, i))

@@ -1,0 +1,5 @@
+"""Clean twin of pallas002_violation.py: importing the cap is the
+single-sourcing contract (and unrelated constants are untouched)."""
+from repro.kernels.trmean.kernel import COUNTS_LANES  # noqa: F401
+
+MY_OWN_CAP = 64

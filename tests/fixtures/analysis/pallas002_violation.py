@@ -1,0 +1,4 @@
+"""Seeded PALLAS002 violation: a layout cap redefined outside its owner
+module (this fixture is obviously not kernels/trmean/kernel.py)."""
+
+COUNTS_LANES = 64                            # VIOLATION PALLAS002 line 4

@@ -1,0 +1,32 @@
+"""Clean twin of prng001_violation.py: the idiomatic split/fold patterns
+must produce zero findings."""
+import jax
+
+
+def split_per_use(key):
+    ka, kb = jax.random.split(key)
+    a = jax.random.normal(ka, (4,))
+    b = jax.random.uniform(kb, (4,))
+    return a + b
+
+
+def loop_advance(key, n):
+    total = 0.0
+    for _ in range(n):
+        key, sub = jax.random.split(key)     # rebind advances the stream
+        total += jax.random.normal(sub, ())
+    return total
+
+
+def loop_fold(key, n):
+    total = 0.0
+    for i in range(n):
+        total += jax.random.normal(jax.random.fold_in(key, i), ())
+    return total
+
+
+def branch_arms(key, flag):
+    # Sibling if/else arms are exclusive: one consumption each is fine.
+    if flag:
+        return jax.random.normal(key, ())
+    return jax.random.uniform(key, ())

@@ -1,0 +1,19 @@
+"""Seeded PRNG001 violations: key reuse and loop reuse.
+
+Line numbers are asserted exactly by tests/test_analysis.py — the marker
+comments flag the lines under test, so edit with care.
+"""
+import jax
+
+
+def double_consume(key):
+    a = jax.random.normal(key, (4,))
+    b = jax.random.uniform(key, (4,))    # VIOLATION PRNG001 line 11
+    return a + b
+
+
+def loop_reuse(key, n):
+    total = 0.0
+    for _ in range(n):
+        total += jax.random.normal(key, ())  # VIOLATION PRNG001 line 18
+    return total

@@ -1,0 +1,12 @@
+"""Clean twin of prng002_violation.py."""
+import jax
+
+
+def all_consumed(key):
+    ka, kb = jax.random.split(key)
+    return jax.random.normal(ka, ()) + jax.random.uniform(kb, ())
+
+
+def underscore_discard(key):
+    ka, _ = jax.random.split(key)            # "_" is an explicit discard
+    return jax.random.normal(ka, ())

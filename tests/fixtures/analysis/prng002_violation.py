@@ -1,0 +1,12 @@
+"""Seeded PRNG002 violations: split results that are never consumed."""
+import jax
+
+
+def discarded_split(key):
+    jax.random.split(key)                    # VIOLATION PRNG002 line 6
+    return 0.0
+
+
+def dead_subkey(key):
+    ka, kb = jax.random.split(key)           # VIOLATION PRNG002 line 11 (kb)
+    return jax.random.normal(ka, ())

@@ -1,0 +1,16 @@
+"""Clean twin of prng003_violation.py: stable derivations are fine."""
+import zlib
+
+import jax
+
+
+def crc_seed(name):
+    return jax.random.PRNGKey(zlib.crc32(name.encode()) & 0x7FFFFFFF)
+
+
+def threaded_fold(key, step):
+    return jax.random.fold_in(key, step)
+
+
+def kwarg_seed(make_dataset, seed):
+    return make_dataset(seed=seed)

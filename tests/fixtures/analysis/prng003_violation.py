@@ -1,0 +1,21 @@
+"""Seeded PRNG003 violations: nondeterministic values feeding seeds."""
+import random
+import time
+
+import jax
+
+
+def hash_seed(name):
+    return jax.random.PRNGKey(hash(name))    # VIOLATION PRNG003 line 9
+
+
+def time_seed():
+    return jax.random.PRNGKey(int(time.time()))  # VIOLATION PRNG003 line 13
+
+
+def random_fold(key):
+    return jax.random.fold_in(key, random.randint(0, 9))  # VIOLATION PRNG003
+
+
+def kwarg_seed(make_dataset):
+    return make_dataset(seed=int(time.time()))  # VIOLATION PRNG003 line 21

@@ -1,0 +1,6 @@
+"""Clean twin of prng004_violation.py: threaded seeds are the contract."""
+import jax
+
+
+def threaded(seed: int):
+    return jax.random.normal(jax.random.PRNGKey(seed), (4,))

@@ -1,0 +1,12 @@
+"""Seeded PRNG004 violations (only fire with library_code=True — the
+engine treats src/repro paths as library code; this fixture is analyzed
+with the flag forced by the test)."""
+import jax
+
+
+def baked_in_seed():
+    return jax.random.normal(jax.random.PRNGKey(0), (4,))  # VIOLATION PRNG004
+
+
+def argless():
+    return jax.random.PRNGKey()              # VIOLATION PRNG004 line 12

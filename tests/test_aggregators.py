@@ -148,9 +148,9 @@ def test_phocas_dimensional_resilience(data):
 @given(st.integers(5, 30), st.integers(0, 2**31 - 1))
 @settings(max_examples=30, deadline=None)
 def test_coordinate_wise_rules_permutation_invariant(m, seed):
-    key = jax.random.PRNGKey(seed)
-    u = jax.random.normal(key, (m, 8))
-    perm = jax.random.permutation(key, m)
+    ku, kp = jax.random.split(jax.random.PRNGKey(seed))
+    u = jax.random.normal(ku, (m, 8))
+    perm = jax.random.permutation(kp, m)
     b = (m - 1) // 3
     for rule in (lambda x: agg.trmean(x, b), lambda x: agg.phocas(x, b),
                  agg.median, agg.mean):
@@ -199,7 +199,7 @@ def test_variance_bound_montecarlo(rule, delta_fn):
     key = jax.random.PRNGKey(42)
     errs = []
     for t in range(trials):
-        k1, k2, k3 = jax.random.split(jax.random.fold_in(key, t), 3)
+        k1, k2, _ = jax.random.split(jax.random.fold_in(key, t), 3)
         u = jax.random.normal(k1, (m, d))    # g = 0
         scores = jax.random.uniform(k2, (m, d))
         ranks = jnp.argsort(jnp.argsort(scores, axis=0), axis=0)
@@ -215,3 +215,78 @@ def test_bounds_monotonicity():
     assert bounds.delta_phocas(20, 2, 4, V) > bounds.delta_trmean(20, 2, 4, V)
     with pytest.raises(ValueError):
         bounds.delta_trmean(10, 5, 5, V)     # 2q < m violated
+
+
+# ---------------------------------------------------------------------------
+# One-pass gated defense overrides (fused_gate) for the vector-wise rules
+# ---------------------------------------------------------------------------
+
+def _gated_setup(m=10, d=33, seed=7):
+    from repro.core import registry
+    ku, _ = jax.random.split(jax.random.PRNGKey(seed))
+    u = jax.random.normal(ku, (m, d))
+    u = u.at[0].set(50.0)                    # far outlier, soon ejected
+    active = jnp.ones((m,)).at[0].set(0.0)
+    return registry, u, active
+
+
+@pytest.mark.parametrize("rule", ("krum", "multikrum"))
+def test_krum_family_gated_override_matches_composed(rule):
+    """The incremental gated-Gram one-pass hook is drop-in for the
+    registry's two-pass composition (same selection, same scores)."""
+    from repro.core.registry import AggregatorRule
+    registry, u, active = _gated_setup()
+    r = registry.make_rule(rule, registry.RuleParams(q=2, backend="xla"))
+    got_agg, got_sc = r.reduce_gated_with_scores(u, active)
+    ref_agg, ref_sc = AggregatorRule.reduce_sharded_gated_with_scores(
+        r, u, active, ())
+    np.testing.assert_allclose(np.asarray(got_sc), np.asarray(ref_sc),
+                               atol=1e-5)
+    np.testing.assert_allclose(np.asarray(got_agg), np.asarray(ref_agg),
+                               atol=1e-4)
+
+
+@pytest.mark.parametrize("rule", ("krum", "multikrum", "geomedian"))
+def test_vector_rule_gated_none_equals_ungated(rule):
+    registry, u, _ = _gated_setup()
+    r = registry.make_rule(rule, registry.RuleParams(q=2, backend="xla"))
+    got_agg, got_sc = r.reduce_gated_with_scores(u, None)
+    ref_agg, ref_sc = r.reduce_sharded_with_scores(u, ())
+    np.testing.assert_allclose(np.asarray(got_agg), np.asarray(ref_agg),
+                               atol=1e-6)
+    np.testing.assert_allclose(np.asarray(got_sc), np.asarray(ref_sc),
+                               atol=1e-6)
+
+
+def test_geomedian_gated_override_center_matches_composed():
+    """One Weiszfeld run on the gated matrix == the composed path's gated
+    aggregate; scores still observe the raw submissions (the ejected far
+    row stays maximally suspicious — flap prevention)."""
+    registry, u, active = _gated_setup()
+    r = registry.make_rule("geomedian", registry.RuleParams(backend="xla"))
+    got_z, got_sc = r.reduce_gated_with_scores(u, active)
+    from repro.core.selection import gate_matrix
+    ref_z = r.reduce_sharded(gate_matrix(u, active), ())
+    np.testing.assert_allclose(np.asarray(got_z), np.asarray(ref_z),
+                               atol=1e-5)
+    sc = np.asarray(got_sc)
+    assert sc.shape == (u.shape[0],) and np.isfinite(sc).all()
+    assert (sc >= 0.0).all() and (sc <= 1.0).all()
+    assert sc[0] == sc.max() and sc[0] > 0.5   # raw outlier still blamed
+
+
+def test_fused_gate_metadata_matches_overrides():
+    """fused_gate is the routing metadata CONTRACT007 enforces: True
+    exactly for rules whose gated hook is a genuine override."""
+    from repro.core.registry import AggregatorRule
+    from repro.core import registry
+    expected = set()
+    for name in registry.available_rules():
+        cls = registry.get_rule(name)
+        own = cls.reduce_sharded_gated_with_scores \
+            is not AggregatorRule.reduce_sharded_gated_with_scores
+        assert cls.fused_gate == own, name
+        if own:
+            expected.add(name)
+    assert set(registry.fused_gate_rules()) == expected
+    assert {"krum", "multikrum", "geomedian"} <= expected

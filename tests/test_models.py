@@ -23,10 +23,11 @@ def _batch(cfg, B=4, S=16):
     batch = {"tokens": toks, "labels": toks}
     if cfg.num_patches:
         batch["patch_embeds"] = 0.1 * jax.random.normal(
-            KEY, (B, cfg.num_patches, cfg.vit_dim))
+            jax.random.fold_in(KEY, 1), (B, cfg.num_patches, cfg.vit_dim))
     if cfg.is_encdec:
         batch["audio_embeds"] = 0.1 * jax.random.normal(
-            KEY, (B, cfg.encoder_seq_len, cfg.frontend_dim))
+            jax.random.fold_in(KEY, 2),
+            (B, cfg.encoder_seq_len, cfg.frontend_dim))
     return batch
 
 
