@@ -1,12 +1,25 @@
-"""Aggregation perf-regression guard (CI).
+"""Perf-regression guard (CI).
 
-Reads a fresh ``results/overhead.csv`` (written by ``benchmarks/overhead.py``)
-and fails if any guarded rule's ``overhead_vs_mean`` exceeds its budget.
-Budgets are half the seed measurements (phocas 9.9x, mediam 10.2x): the
-shared-selection hot path (DESIGN.md §8) must keep dimensional robustness
-within ~a few x of plain averaging, per §4.4's O(dm) complexity claim.
+Two budgets, each read from a fresh benchmark CSV:
+
+* Aggregation (``results/overhead.csv``, written by ``benchmarks/overhead``):
+  any guarded rule's ``overhead_vs_mean`` over budget fails.  Budgets are
+  half the seed measurements (phocas 9.9x, mediam 10.2x): the
+  shared-selection hot path (DESIGN.md §8) must keep dimensional
+  robustness within ~a few x of plain averaging, per §4.4's O(dm)
+  complexity claim.
+
+* Serving (``results/serve_overhead.csv``, written by
+  ``benchmarks/bench_serve``): the k=3 replicated phocas decode step must
+  stay <= 3.5x a single-replica step — three vmapped replica forwards plus
+  the logits aggregation; anything past ~3x forward cost means the
+  aggregation stopped being negligible (DESIGN.md §11).
 
   python -m benchmarks.perf_guard [--csv results/overhead.csv]
+                                  [--serve-csv results/serve_overhead.csv]
+
+Each check runs iff its CSV path is non-empty, so CI stages guard only
+what they just benchmarked.
 """
 from __future__ import annotations
 
@@ -20,8 +33,13 @@ BUDGETS = {
     "mediam": 5.1,   # seed: 10.2x
 }
 
+# decode mode -> max allowed overhead_vs_single (x a single-replica step)
+SERVE_BUDGETS = {
+    "phocas_k3": 3.5,
+}
 
-def main(path: str = "results/overhead.csv") -> int:
+
+def check_aggregation(path: str) -> list:
     with open(path, newline="") as f:
         rows = {r["rule"]: float(r["overhead_vs_mean"])
                 for r in csv.DictReader(f)}
@@ -35,6 +53,33 @@ def main(path: str = "results/overhead.csv") -> int:
                             f"budget {budget:.1f}x")
         else:
             print(f"perf_guard {rule}: {got:.2f}x <= {budget:.1f}x OK")
+    return failures
+
+
+def check_serve(path: str) -> list:
+    with open(path, newline="") as f:
+        rows = {r["mode"]: float(r["overhead_vs_single"])
+                for r in csv.DictReader(f)}
+    failures = []
+    for mode, budget in SERVE_BUDGETS.items():
+        got = rows.get(mode)
+        if got is None:
+            failures.append(f"serve {mode}: missing from {path}")
+        elif got > budget:
+            failures.append(f"serve {mode}: decode step {got:.2f}x a "
+                            f"single-replica step exceeds budget "
+                            f"{budget:.1f}x")
+        else:
+            print(f"perf_guard serve {mode}: {got:.2f}x <= {budget:.1f}x OK")
+    return failures
+
+
+def main(path: str = "results/overhead.csv", serve_path: str = "") -> int:
+    failures = []
+    if path:
+        failures += check_aggregation(path)
+    if serve_path:
+        failures += check_serve(serve_path)
     for msg in failures:
         print(f"perf_guard FAIL {msg}", file=sys.stderr)
     return 1 if failures else 0
@@ -42,6 +87,9 @@ def main(path: str = "results/overhead.csv") -> int:
 
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
-    ap.add_argument("--csv", default="results/overhead.csv")
+    ap.add_argument("--csv", default="results/overhead.csv",
+                    help="aggregation overhead CSV ('' skips the check)")
+    ap.add_argument("--serve-csv", default="",
+                    help="serving decode-step CSV ('' skips the check)")
     args = ap.parse_args()
-    sys.exit(main(args.csv))
+    sys.exit(main(args.csv, args.serve_csv))

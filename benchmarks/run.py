@@ -127,6 +127,22 @@ def main(full: bool = False, only: str = "") -> None:
                  f"analysis/{r['rule']},0,count={r['count']}"
                  for r in rows if r["count"]] or ["analysis/clean,0,count=0"])
 
+    if pick("serve"):
+        from benchmarks.bench_serve import main as f
+
+        def _serve_line(r):
+            if r.get("ms_per_step") is not None:
+                return (f"serve/step/{r['mode']},"
+                        f"{r['ms_per_step'] * 1e3:.0f},"
+                        f"x_single={r['overhead_vs_single']:.2f}")
+            return (f"serve/{r['mode']}/{r['rule']}/rate{r['arrival_rate']},"
+                    f"0,p50={r['latency_p50_ms']:.0f}ms;"
+                    f"p99={r['latency_p99_ms']:.0f}ms;"
+                    f"tps={r['tokens_per_sec']:.1f}")
+
+        _run("serve", lambda: f(full=full),
+             lambda rows: [_serve_line(r) for r in rows])
+
     if pick("roofline"):
         from benchmarks.roofline import main as f
         _run("roofline", lambda: f(markdown=False),

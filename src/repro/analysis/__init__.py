@@ -9,7 +9,7 @@ tooling that keeps those invariants honest as the repo grows:
 
 * ``prng``      — PRNG-discipline AST checks (PRNG001..PRNG004);
 * ``contracts`` — plugin-metadata conformance via import + inspect
-                  (CONTRACT001..CONTRACT008, PALLAS003);
+                  (CONTRACT001..CONTRACT009, PALLAS003);
 * ``axes``      — collective axis-name + shard_map spec checks
                   (AXIS001..AXIS002);
 * ``layout``    — Pallas block-layout / cap-constant checks

@@ -1,4 +1,4 @@
-"""Plugin-contract conformance analyzer (CONTRACT001-CONTRACT008, PALLAS003).
+"""Plugin-contract conformance analyzer (CONTRACT001-CONTRACT009, PALLAS003).
 
 The Rule/Attack/Topology registries (DESIGN.md §6/§9) carry metadata the
 whole stack dispatches on — ``emits_scores``, ``has_kernel``,
@@ -26,6 +26,9 @@ registered plugin:
   overridden (the one-pass defense path, satellite routing metadata).
 * CONTRACT008 — topology ``attack_allowlist`` / streaming
   ``STREAMING_ATTACKS`` entries name registered attacks.
+* CONTRACT009 — paged serving-cache invariants: ``DEFAULT_BLOCK_TOKENS``
+  fills whole TPU sublanes, divides ``DEFAULT_TILE_D``, and the block
+  allocator never hands out (or takes back) the reserved null block 0.
 * PALLAS003 — live cross-module layout invariants (COUNTS_LANES == 128,
   tile divisibility, selection caps ordered, ref oracles importable).
 
@@ -404,6 +407,49 @@ def _check_layout_invariants() -> List[Finding]:
     return findings
 
 
+def _check_serve_invariants() -> List[Finding]:
+    """CONTRACT009: the paged serving cache's layout and allocator
+    invariants (DESIGN.md §11) against the live modules."""
+    findings: List[Finding] = []
+
+    def finding(mod, msg: str, hint: str) -> None:
+        path, _ = _anchor(mod)
+        findings.append(Finding(rule="CONTRACT009", path=path, line=1,
+                                message=msg, hint=hint))
+
+    from repro.kernels import common
+    from repro.serve import cache as serve_cache
+
+    bt = serve_cache.DEFAULT_BLOCK_TOKENS
+    if bt % common.SUBLANE:
+        finding(serve_cache,
+                f"DEFAULT_BLOCK_TOKENS={bt} is not a multiple of the f32 "
+                f"TPU sublane ({common.SUBLANE})",
+                "a KV block's token axis must fill whole (8, 128) tiles")
+    if common.DEFAULT_TILE_D % bt:
+        finding(serve_cache,
+                f"DEFAULT_TILE_D={common.DEFAULT_TILE_D} is not a multiple "
+                f"of DEFAULT_BLOCK_TOKENS={bt}",
+                "a lane-tile of flattened KV rows must cover whole blocks")
+
+    alloc = serve_cache.BlockAllocator(8)
+    handed = alloc.alloc(alloc.free_blocks)
+    if 0 in handed:
+        finding(serve_cache,
+                "BlockAllocator handed out block 0 (the reserved "
+                "null/trash block inactive slots scatter into)",
+                "the free list must start at block 1")
+    try:
+        serve_cache.BlockAllocator(8).free([0])
+    except ValueError:
+        pass
+    else:
+        finding(serve_cache,
+                "BlockAllocator.free accepted block 0 back into the pool",
+                "freeing the reserved null block must raise")
+    return findings
+
+
 # ---------------------------------------------------------------------------
 # Entry points
 # ---------------------------------------------------------------------------
@@ -427,6 +473,7 @@ def check_registry() -> List[Finding]:
                                         attack_names))
     findings.extend(_check_streaming_attacks(attack_names))
     findings.extend(_check_layout_invariants())
+    findings.extend(_check_serve_invariants())
     return findings
 
 

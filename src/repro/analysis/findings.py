@@ -57,6 +57,9 @@ RULES: Dict[str, Tuple[str, str]] = {
                              "reduce_sharded_gated_with_scores override"),
     "CONTRACT008": ("error", "attack_allowlist/STREAMING_ATTACKS entry "
                              "names an unregistered attack"),
+    "CONTRACT009": ("error", "serving paged-cache invariant violated "
+                             "(block size vs Pallas lane constants, or the "
+                             "reserved null block handed out)"),
 }
 
 

@@ -35,6 +35,8 @@ _BLOCKSPEC_NAMES = frozenset({
 LAYOUT_CONSTANT_OWNERS: Dict[str, str] = {
     "COUNTS_LANES": "src/repro/kernels/trmean/kernel.py",
     "DEFAULT_TILE_D": "src/repro/kernels/common.py",
+    "SUBLANE": "src/repro/kernels/common.py",
+    "DEFAULT_BLOCK_TOKENS": "src/repro/serve/cache.py",
     "_NETWORK_MAX_M": "src/repro/core/selection.py",
     "_PAIRWISE_MAX_M": "src/repro/core/selection.py",
 }

@@ -14,6 +14,9 @@ from repro.experiment.runner import (  # noqa: F401
 from repro.experiment.spec import (  # noqa: F401
     DataSpec, ModelSpec, ScenarioSpec, SpecError,
 )
+from repro.experiment.sweep import (  # noqa: F401
+    apply_overrides, run_cached, run_sweep, scenario_key, sweep,
+)
 from repro.experiment.topology import (  # noqa: F401
     Topology, available_topologies, get_topology, make_topology,
     register_topology,

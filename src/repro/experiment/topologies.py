@@ -29,6 +29,7 @@ from repro.core import registry
 from repro.data.pipeline import make_worker_batches
 from repro.defense.telemetry import TelemetryWriter
 from repro.experiment.runner import ExperimentResult, Plan
+from repro.experiment.spec import SpecError
 from repro.experiment.topology import Topology, register_topology
 from repro.optim.optimizers import init_opt_state
 from repro.train.streaming import STREAMING_ATTACKS
@@ -282,3 +283,145 @@ def _scalarize(metrics: dict) -> dict:
         if arr.ndim == 0:
             out[k] = float(arr)
     return out
+
+
+@register_topology
+class Serve(Topology):
+    """Serving as a scenario (DESIGN.md §11): Poisson arrivals through the
+    continuous-batching paged engine (``repro.serve.ServeEngine``), with
+    ``spec.robust`` selecting the logits-aggregation rule when k replicas
+    serve each decode step and ``spec.attack`` corrupting
+    ``num_byzantine`` of them (clamped to the replica trim bound).
+
+    ``spec.steps`` caps engine iterations; history records carry queue
+    depth and throughput; final metrics are the latency/throughput summary
+    ``benchmarks/bench_serve.py`` aggregates over its load-mix grid.
+    """
+
+    name = "serve"
+    supports_defense = True
+    # Replica count lives here (NOT spec.num_workers, which is the training
+    # fan-out and must stay >= 2); every key is read via a literal
+    # topology_params.get(...) below so repro.analysis CONTRACT006 can
+    # cross-check this tuple against the loop body.
+    param_names = ("replicas", "max_slots", "max_seq_len", "block_tokens",
+                   "num_requests", "arrival_rate", "prompt_len",
+                   "max_new_tokens")
+    # corrupt_replica injects Gaussian garbage parameters — the only fault
+    # model the serving path simulates.
+    attack_allowlist = ("gaussian",)
+
+    def validate_spec(self, spec) -> None:
+        super().validate_spec(spec)
+        if spec.model.kind != "arch":
+            raise SpecError("topology 'serve' decodes an arch-zoo model; "
+                            "set model.kind='arch' (+ data.kind='tokens')")
+        from repro.configs import get_arch
+        from repro.models.stack import paged_supported
+        if not paged_supported(get_arch(spec.model.arch)):
+            raise SpecError(
+                f"arch {spec.model.arch!r} is not paged-serving capable "
+                "(SSM/hybrid/MLA/enc-dec/windowed layers); pick an "
+                "all-global attention arch like 'granite-8b-reduced'")
+        k = int(spec.topology_params.get("replicas", 1))
+        if k > 1:
+            bmax = (k + 1) // 2 - 1
+            if not 0 <= spec.robust.b <= bmax:
+                raise SpecError(
+                    f"replicated decode with k={k} replicas needs "
+                    f"0 <= robust.b <= (k+1)//2-1 = {bmax}, got "
+                    f"b={spec.robust.b}")
+            q = spec.effective_attack().num_byzantine
+            if q > bmax:
+                raise SpecError(
+                    f"attack corrupts {q} replicas but k={k} replicated "
+                    f"decode tolerates at most (k+1)//2-1 = {bmax}")
+
+    def run(self, plan: Plan, init_state=None) -> ExperimentResult:
+        import numpy as np
+        from repro.serve import (RobustDecoder, ServeEngine, corrupt_replica,
+                                 make_replicas)
+
+        replicas = int(plan.topology_params.get("replicas", 1))
+        max_slots = int(plan.topology_params.get("max_slots", 8))
+        max_seq_len = int(plan.topology_params.get("max_seq_len", 128))
+        block_tokens = int(plan.topology_params.get("block_tokens", 16))
+        num_requests = int(plan.topology_params.get("num_requests", 16))
+        # arrival_rate: requests per engine step (Poisson)
+        arrival_rate = float(plan.topology_params.get("arrival_rate", 2.0))
+        prompt_len = int(plan.topology_params.get("prompt_len", 8))
+        max_new = int(plan.topology_params.get("max_new_tokens", 16))
+
+        model = plan.model
+        key = jax.random.PRNGKey(plan.seed)
+        params = model.init(key) if init_state is None else init_state[0]
+
+        decoder = None
+        if replicas > 1:
+            rc = plan.robust_cfg
+            params = make_replicas(params, replicas)
+            corrupt = rc.attack.num_byzantine if rc.attack.name == "gaussian" \
+                else 0
+            for i in range(corrupt):
+                params = corrupt_replica(
+                    params, replicas - 1 - i,
+                    jax.random.fold_in(key, 1000 + i))
+            decoder = RobustDecoder(
+                rule=rc.rule, k=replicas, b=rc.b,
+                defense=plan.defense_cfg, backend=rc.backend)
+
+        history: list = []
+        t0 = time.time()
+        with TelemetryWriter(plan.telemetry_path) as tel:
+            engine = ServeEngine(
+                model, params, max_slots=max_slots, max_seq_len=max_seq_len,
+                block_tokens=block_tokens, decoder=decoder, telemetry=tel)
+
+            # Deterministic Poisson arrivals in engine-step time.
+            rng = np.random.default_rng(plan.seed)
+            gaps = rng.exponential(1.0 / max(arrival_rate, 1e-9),
+                                   num_requests)
+            due = np.cumsum(gaps)
+            prompts = rng.integers(0, model.cfg.vocab_size,
+                                   (num_requests, prompt_len))
+            submitted = 0
+            produced = 0
+            for i in range(plan.steps):
+                while submitted < num_requests and due[submitted] <= i:
+                    engine.submit(prompts[submitted].tolist(), max_new)
+                    submitted += 1
+                if submitted >= num_requests and not engine.scheduler.busy:
+                    break
+                produced += engine.step()
+                if i % plan.record_every == 0:
+                    history.append({
+                        "step": i, "submitted": submitted,
+                        "queued": engine.scheduler.queued,
+                        "active": len(engine.scheduler.active),
+                        "tokens": produced})
+            engine.scheduler.retire_finished()
+
+        wall = time.time() - t0
+        done = engine.scheduler.completed
+        lat = sorted(r.latency_ms() for r in done) or [0.0]
+        ttft = sorted(r.first_token_ms() for r in done) or [0.0]
+        pct = lambda xs, q: xs[min(len(xs) - 1,  # noqa: E731
+                                   int(q * (len(xs) - 1) + 0.5))]
+        metrics = {
+            "completed": float(len(done)),
+            "tokens": float(produced),
+            "tokens_per_sec": produced / max(wall, 1e-9),
+            "latency_p50_ms": pct(lat, 0.50),
+            "latency_p99_ms": pct(lat, 0.99),
+            "ttft_p50_ms": pct(ttft, 0.50),
+            "engine_steps": float(engine.steps_run),
+        }
+        if decoder is not None:
+            metrics["ejected_replicas"] = float(
+                len(decoder.ejected_replicas()))
+        history.append({"step": engine.steps_run, **metrics})
+
+        return ExperimentResult(
+            spec=plan.spec, history=history, params=params,
+            final_metrics=metrics, robust_cfg=plan.robust_cfg,
+            wall_time=wall)

@@ -9,6 +9,11 @@ import jax.numpy as jnp
 # inside the ~16MB VMEM budget even with double buffering.
 DEFAULT_TILE_D = 2048
 
+# Sublane (second-minor) axis of the f32 TPU vector-memory tile: min tile is
+# (8, 128).  Layout constants that put a token/worker axis on the sublane
+# dimension (e.g. serve/cache.DEFAULT_BLOCK_TOKENS) must be multiples of it.
+SUBLANE = 8
+
 # On CPU containers Pallas runs the kernel body in interpret mode.
 INTERPRET = jax.default_backend() == "cpu"
 

@@ -254,8 +254,9 @@ def _cache_positions(size: int, pos: jax.Array,
 
 
 def attention_block(p, cfg, x, *, positions, window, cache=None):
-    """x: (B,S,d).  Training/prefill when cache is None; decode otherwise
-    (S==1, positions scalar broadcast (1,))."""
+    """x: (B,S,d).  Training (no cache) when cache is None; cached otherwise:
+    decode (S==1, positions (1,)) or batched prefill (S==S0 contiguous
+    positions, S0 <= the layer's ring size — engine-gated)."""
     B, S, d = x.shape
     H, Kv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
     q = linear(p["wq"], x).reshape(B, S, H, hd)
@@ -270,15 +271,110 @@ def attention_block(p, cfg, x, *, positions, window, cache=None):
         new_cache = None
     else:
         size = cache["k"].shape[1]
-        pos = positions[0]                              # scalar decode position
-        slot = pos % size
+        start = positions[0]                # write offset (decode: the step)
+        last = positions[-1]                # newest position now in the cache
+        slot = start % size
         ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, slot, axis=1)
         cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, slot, axis=1)
-        k_pos = _cache_positions(size, pos, window)
+        k_pos = _cache_positions(size, last, window)
         out = attention_core(q, ck, cv, positions, k_pos, causal=True,
                              window=window, cap=cfg.attn_logit_softcap)
         new_cache = {"k": ck, "v": cv}
     return linear(p["wo"], out.reshape(B, S, H * hd)), new_cache
+
+
+# ---------------------------------------------------------------------------
+# Paged KV cache (repro.serve v2, DESIGN.md §11)
+# ---------------------------------------------------------------------------
+# One global pool of fixed-size blocks per layer; requests own disjoint block
+# lists via per-request block tables (B, max_blocks) int32.  Block 0 is the
+# reserved null/trash block: inactive batch slots carry an all-zero table row
+# and scatter their k/v there — its contents are finite garbage that active
+# requests never attend to (unused table-tail gathers of block 0 fall beyond
+# the per-request validity mask, so softmax weighs them exactly 0).
+
+def init_paged_kv(cfg, num_blocks: int, block_tokens: int) -> dict:
+    dt = dtype_of(cfg)
+    Kv, hd = cfg.num_kv_heads, cfg.head_dim
+    return {
+        "k": jnp.zeros((num_blocks, block_tokens, Kv, hd), dt),
+        "v": jnp.zeros((num_blocks, block_tokens, Kv, hd), dt),
+    }
+
+
+def _attend_paged(q, k, v, pos, *, cap, scale=None):
+    """Decode attention with per-request lengths.  q: (B,1,H,hd); k/v:
+    (B,T,Kv,hd) gathered per-request views; pos: (B,) newest position of
+    each request.  Same einsum contractions / f32 softmax / NaN guard as
+    :func:`_attend`, so paged and dense decode agree bit-for-bit — the only
+    change is the validity mask going per-request (B,T)."""
+    B, Sq, H, hd = q.shape
+    T, Kv = k.shape[1], k.shape[2]
+    rep = H // Kv
+    if scale is None:
+        scale = hd ** -0.5
+    qg = q.reshape(B, Sq, Kv, rep, hd)
+    s = jnp.einsum("bqkrh,btkh->bkrqt", qg, k,
+                   preferred_element_type=jnp.float32) * scale
+    s = softcap(s, cap)
+    mask = jnp.arange(T)[None, :] <= pos[:, None]      # (B, T) causal+validity
+    s = jnp.where(mask[:, None, None, None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)                     # f32 softmax
+    p = jnp.where(jnp.isnan(p), 0.0, p)                # fully-masked rows
+    out = jnp.einsum("bkrqt,btkh->bqkrh", p.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(B, Sq, H, hd).astype(v.dtype)
+
+
+def attention_block_paged(p, cfg, x, *, positions, block_tables, cache):
+    """One paged decode step.  x: (B,1,d); positions: (B,) per-request write
+    position; block_tables: (B, max_blocks) int32; cache: the layer's block
+    pool {"k","v"}: (N, bt, Kv, hd).  Scatter-writes the new k/v at
+    (table[pos//bt], pos%bt) then attends over the gathered per-request
+    view.  Global (un-windowed) layers only — see stack.paged_supported."""
+    B, S, d = x.shape
+    H, Kv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    q = linear(p["wq"], x).reshape(B, S, H, hd)
+    k = linear(p["wk"], x).reshape(B, S, Kv, hd)
+    v = linear(p["wv"], x).reshape(B, S, Kv, hd)
+    q = rope(q, positions[:, None], cfg.rope_theta)
+    k = rope(k, positions[:, None], cfg.rope_theta)
+
+    bt = cache["k"].shape[1]
+    blk = jnp.take_along_axis(block_tables, (positions // bt)[:, None],
+                              axis=1)[:, 0]            # (B,)
+    off = positions % bt
+    ck = cache["k"].at[blk, off].set(k[:, 0])
+    cv = cache["v"].at[blk, off].set(v[:, 0])
+    T = block_tables.shape[1] * bt
+    keys = ck[block_tables].reshape(B, T, Kv, hd)
+    vals = cv[block_tables].reshape(B, T, Kv, hd)
+    out = _attend_paged(q, keys, vals, positions, cap=cfg.attn_logit_softcap)
+    return linear(p["wo"], out.reshape(B, S, H * hd)), {"k": ck, "v": cv}
+
+
+def attention_block_prefill_paged(p, cfg, x, *, positions, block_tables,
+                                  cache):
+    """Batched paged prefill.  x: (B,S0,d) whole prompts aligned at position
+    0; positions: (S0,) = arange(S0).  Ordinary causal self-attention over
+    the prompt (no cache read), with the computed k/v scattered into the
+    block pool so subsequent paged decode steps see them."""
+    B, S, d = x.shape
+    H, Kv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    q = linear(p["wq"], x).reshape(B, S, H, hd)
+    k = linear(p["wk"], x).reshape(B, S, Kv, hd)
+    v = linear(p["wv"], x).reshape(B, S, Kv, hd)
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    out = attention_core(q, k, v, positions, positions, causal=True,
+                         window=None, cap=cfg.attn_logit_softcap)
+
+    bt = cache["k"].shape[1]
+    blk = block_tables[:, positions // bt]             # (B, S0)
+    off = jnp.broadcast_to(positions % bt, (B, S))
+    ck = cache["k"].at[blk, off].set(k)
+    cv = cache["v"].at[blk, off].set(v)
+    return linear(p["wo"], out.reshape(B, S, H * hd)), {"k": ck, "v": cv}
 
 
 # ---------------------------------------------------------------------------
@@ -363,12 +459,14 @@ def mla_block(p, cfg, x, *, positions, cache=None, window=None):
                                   positions, positions)
         new_cache = None
     else:
-        pos = positions[0]
-        ckv = jax.lax.dynamic_update_slice_in_dim(cache["ckv"], ckv_new, pos, 1)
+        start = positions[0]                # decode: the step; prefill: 0
+        last = positions[-1]                # newest cached position
+        ckv = jax.lax.dynamic_update_slice_in_dim(cache["ckv"], ckv_new,
+                                                  start, 1)
         krope = jax.lax.dynamic_update_slice_in_dim(cache["krope"], krope_new,
-                                                    pos, 1)
+                                                    start, 1)
         T = ckv.shape[1]
-        k_pos = jnp.where(jnp.arange(T) <= pos, jnp.arange(T), -1)
+        k_pos = jnp.where(jnp.arange(T) <= last, jnp.arange(T), -1)
         out = _mla_attend_chunked(p, cfg, q_nope, q_rope, ckv, krope,
                                   positions, k_pos)
         new_cache = {"ckv": ckv, "krope": krope}

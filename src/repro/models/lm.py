@@ -86,10 +86,45 @@ def init_cache(cfg, batch_size: int, max_len: int) -> dict:
 
 
 def decode_step(params, cfg, cache, tokens, pos):
-    """One decode step.  tokens (B,1) int32, pos scalar int32.
-    Returns (logits (B,1,V), new_cache)."""
+    """One decode step (tokens (B,1), pos scalar) or a batched prefill
+    (tokens (B,S0), pos = arange(S0) — one pass writes the whole prompt
+    into the cache).  Returns (logits (B,S,V), new_cache)."""
     x = C.embed(params["embed"], tokens) * math.sqrt(cfg.d_model)
     positions = pos[None] if jnp.ndim(pos) == 0 else pos
     x, new_cache, _ = ST.stack_fwd(params["stack"], cfg, x,
                                    positions=positions, cache=cache)
+    return _logits(params, cfg, x), new_cache
+
+
+# ---------------------------------------------------------------------------
+# Paged serving path (repro.serve v2, DESIGN.md §11)
+# ---------------------------------------------------------------------------
+
+def init_paged_cache(cfg, num_blocks: int, block_tokens: int) -> dict:
+    """Block-pool KV cache; see stack.init_stack_paged_cache (raises
+    NotImplementedError for architectures the paged path does not cover)."""
+    return ST.init_stack_paged_cache(cfg, num_blocks, block_tokens)
+
+
+def decode_step_paged(params, cfg, cache, tokens, positions, block_tables):
+    """One paged decode step with per-request positions.  tokens (B,1),
+    positions (B,), block_tables (B, max_blocks) int32.
+    Returns (logits (B,1,V), new_cache)."""
+    x = C.embed(params["embed"], tokens) * math.sqrt(cfg.d_model)
+    x, new_cache = ST.stack_fwd_paged(params["stack"], cfg, x,
+                                      positions=positions,
+                                      block_tables=block_tables, cache=cache)
+    return _logits(params, cfg, x), new_cache
+
+
+def prefill_paged(params, cfg, cache, tokens, block_tables):
+    """Batched paged prefill: one forward pass over whole prompts (B,S0)
+    aligned at position 0, k/v scattered into the block pool.
+    Returns (logits (B,S0,V), new_cache)."""
+    x = C.embed(params["embed"], tokens) * math.sqrt(cfg.d_model)
+    positions = jnp.arange(tokens.shape[1])
+    x, new_cache = ST.stack_fwd_paged(params["stack"], cfg, x,
+                                      positions=positions,
+                                      block_tables=block_tables, cache=cache,
+                                      prefill=True)
     return _logits(params, cfg, x), new_cache

@@ -7,17 +7,24 @@
   init_cache(batch_size, max_len) -> cache
   decode_step(params, cache, tokens, pos) -> (logits, cache)
   input_specs(shape) -> ShapeDtypeStruct batch stand-ins (see launch.dryrun)
+
+Plain-GQA decoder LMs additionally expose the paged serving path
+(``supports_paged``):
+  init_paged_cache(num_blocks, block_tokens) -> block-pool cache
+  prefill_paged(params, cache, tokens, block_tables) -> (logits, cache)
+  decode_step_paged(params, cache, tokens, positions, block_tables)
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Dict
+from typing import Any, Callable, Dict, Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig, InputShape
 from repro.models import encdec, lm
+from repro.models.stack import paged_supported
 
 
 @dataclasses.dataclass(frozen=True)
@@ -28,6 +35,17 @@ class Model:
     loss: Callable
     init_cache: Callable
     decode_step: Callable
+    # Paged serving path (repro.serve v2); None for families the block-pool
+    # cache does not cover (enc-dec) — plain-GQA support is gated at call
+    # time by stack.paged_supported via init_paged_cache.
+    init_paged_cache: Optional[Callable] = None
+    decode_step_paged: Optional[Callable] = None
+    prefill_paged: Optional[Callable] = None
+
+    @property
+    def supports_paged(self) -> bool:
+        return (self.init_paged_cache is not None
+                and paged_supported(self.cfg))
 
     def input_specs(self, shape: InputShape, *, global_batch: int = None,
                     for_decode: bool = None) -> Dict[str, Any]:
@@ -72,4 +90,9 @@ def build_model(cfg: ArchConfig, *, remat: str = "none") -> Model:
         loss=lambda p, b: lm.loss_fn(p, cfg, b, remat=remat),
         init_cache=lambda bs, ml: lm.init_cache(cfg, bs, ml),
         decode_step=lambda p, c, t, pos: lm.decode_step(p, cfg, c, t, pos),
+        init_paged_cache=lambda nb, bt: lm.init_paged_cache(cfg, nb, bt),
+        decode_step_paged=lambda p, c, t, pos, tab: lm.decode_step_paged(
+            p, cfg, c, t, pos, tab),
+        prefill_paged=lambda p, c, t, tab: lm.prefill_paged(p, cfg, c, t,
+                                                            tab),
     )

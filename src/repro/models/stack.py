@@ -150,6 +150,95 @@ def init_stack_cache(cfg, batch: int, max_len: int) -> dict:
     return cache
 
 
+# ---------------------------------------------------------------------------
+# Paged-cache variant (repro.serve v2, DESIGN.md §11)
+# ---------------------------------------------------------------------------
+
+def paged_supported(cfg) -> bool:
+    """Whether the paged serving path covers this architecture: plain global
+    GQA decoder stacks only.  SSM/hybrid state is not paged, MLA caches
+    latents (different pool shape), enc-dec has a second stream, and windowed
+    ring buffers contradict the grow-only block table."""
+    return (not (cfg.is_ssm or cfg.hybrid or cfg.use_mla or cfg.is_encdec)
+            and all(w is None for w in cfg.layer_windows()))
+
+
+def init_stack_paged_cache(cfg, num_blocks: int, block_tokens: int) -> dict:
+    """Per-layer block pools with the same period-grouped structure as
+    :func:`init_stack_cache`, so ``stack_fwd_paged`` scans identically."""
+    if not paged_supported(cfg):
+        raise NotImplementedError(
+            f"paged KV cache unsupported for arch {cfg.name!r}: requires a "
+            "plain global-attention decoder (no SSM/hybrid/MLA/enc-dec, no "
+            "sliding windows); use init_stack_cache / the dense engine")
+    windows, P, n_periods, tail = _period_geometry(cfg)
+
+    def stackify(tree):
+        return jax.tree.map(
+            lambda x: jnp.zeros((n_periods,) + x.shape, x.dtype), tree)
+
+    one = lambda: {"mixer": C.init_paged_kv(cfg, num_blocks, block_tokens)}
+    cache = {"blocks": {f"l{j}": stackify(one()) for j in range(P)}}
+    for j in range(tail):
+        cache[f"tail{j}"] = one()
+    return cache
+
+
+def layer_fwd_paged(p, cfg, x, *, positions, block_tables, cache,
+                    prefill=False):
+    """Returns (x, new_cache).  MoE aux loss is irrelevant at inference and
+    dropped."""
+    h = C.rmsnorm(p["ln1"], x, cfg.norm_eps)
+    attn = (C.attention_block_prefill_paged if prefill
+            else C.attention_block_paged)
+    mix, nc = attn(p["mixer"], cfg, h, positions=positions,
+                   block_tables=block_tables, cache=cache["mixer"])
+    if cfg.use_post_norms:
+        mix = C.rmsnorm(p["post_ln1"], mix, cfg.norm_eps)
+    x = x + mix
+    h = C.rmsnorm(p["ln2"], x, cfg.norm_eps)
+    if cfg.is_moe:
+        f, _ = M.moe_block(p["ffn"], cfg, h)
+    else:
+        f = C.mlp_block(p["ffn"], h)
+    if cfg.use_post_norms:
+        f = C.rmsnorm(p["post_ln2"], f, cfg.norm_eps)
+    return x + f, {"mixer": nc}
+
+
+def stack_fwd_paged(params, cfg, x, *, positions, block_tables, cache,
+                    prefill=False):
+    """Paged analogue of :func:`stack_fwd` (cache always present).
+    Returns (x, new_cache)."""
+    windows, P, n_periods, tail = _period_geometry(cfg)
+
+    def period_body(carry, xs):
+        x = carry
+        blk_p, blk_c = xs
+        new_c = {}
+        for j in range(P):
+            x, nc = layer_fwd_paged(blk_p[f"l{j}"], cfg, x,
+                                    positions=positions,
+                                    block_tables=block_tables,
+                                    cache=blk_c[f"l{j}"], prefill=prefill)
+            new_c[f"l{j}"] = nc
+        return x, new_c
+
+    if n_periods > 0:
+        x, new_blocks = jax.lax.scan(period_body, x,
+                                     (params["blocks"], cache["blocks"]))
+    else:
+        new_blocks = {}
+    new_cache = {"blocks": new_blocks}
+    for j in range(tail):
+        x, nc = layer_fwd_paged(params[f"tail{j}"], cfg, x,
+                                positions=positions,
+                                block_tables=block_tables,
+                                cache=cache[f"tail{j}"], prefill=prefill)
+        new_cache[f"tail{j}"] = nc
+    return x, new_cache
+
+
 def stack_fwd(params, cfg, x, *, positions, cache=None, remat: str = "none"):
     """Apply the full layer stack.  Returns (x, new_cache, aux_total)."""
     windows, P, n_periods, tail = _period_geometry(cfg)

@@ -1,1 +1,8 @@
-from repro.serve.engine import make_serve_step, generate  # noqa: F401
+from repro.serve.cache import (BlockAllocator, OutOfBlocks,  # noqa: F401
+                               PagedKVCache, DEFAULT_BLOCK_TOKENS)
+from repro.serve.engine import (ServeEngine, batched_prefill_supported,  # noqa: F401
+                                generate, generate_stepwise, make_serve_step,
+                                shard_cache)
+from repro.serve.robust_decode import (RobustDecoder,  # noqa: F401
+                                       corrupt_replica, make_replicas)
+from repro.serve.scheduler import Request, Scheduler  # noqa: F401

@@ -1,0 +1,142 @@
+"""Replicated Byzantine-robust decode (repro.serve v2, DESIGN.md §11).
+
+The serving analogue of the paper's dimensional trimmed-mean guarantee: run
+``k`` model replicas per decode step and aggregate their per-token logits
+coordinate-wise through any registered :class:`AggregatorRule`, so a
+corrupted replica (bit-rot, a poisoned checkpoint shard, a hijacked host)
+cannot steer generation.  The rule's per-replica suspicion scores — the
+detection framing of Fall of Empires (1903.03936) — feed the existing
+``defense/reputation.py`` EMA state, so a *persistently* corrupted replica
+is ejected from the aggregate (its rows replaced by the replica median via
+the fused gate) and its health trajectory lands in the shared telemetry
+JSONL.
+
+The logits matrix (k, B, V) is flattened to (k, B·V) — each vocabulary
+coordinate of each request is one aggregation coordinate, exactly the
+worker-gradient layout the rules already handle, so phocas/trmean/mediam,
+their Pallas kernels, and the fused gated path apply unchanged.
+
+With two honest replicas among k=3 and b=1, trmean/phocas return the honest
+logit *exactly* per coordinate (the corrupted value is trimmed whichever
+side it lands on, leaving identical honest values), so robust greedy decode
+matches clean greedy decode bitwise; plain ``mean`` diverges and — emitting
+only uniform zero scores — never ejects (tests/test_serve.py).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.registry import RuleParams, make_rule
+from repro.defense.reputation import (DefenseConfig, init_reputation,
+                                      update_reputation)
+
+
+def make_replicas(params, k: int, *, key: Optional[jax.Array] = None,
+                  jitter: float = 0.0) -> tuple:
+    """``k`` copies of a params pytree, as a TUPLE of independent pytrees.
+
+    A tuple — not a stacked leading axis — so the engine's replica loop
+    unrolls over plain per-replica forwards: a stacked axis forces either
+    batched gather/scatter (vmap) or a fresh full-params slice copy every
+    decode step, both of which blow the <= 3.5x perf budget the guard pins.
+
+    ``jitter > 0`` adds independent Gaussian perturbations of that relative
+    scale per replica (cheap diversity — quantization-noise stand-in);
+    ``jitter = 0`` gives identical replicas, the fault-tolerance
+    configuration whose robust aggregate is exactly the clean value.
+    """
+    if jitter <= 0.0:
+        return tuple(params for _ in range(k))
+    if key is None:
+        raise ValueError("jitter > 0 needs an explicit PRNG key")
+
+    def noised(p, kk):
+        leaves, treedef = jax.tree.flatten(p)
+        keys = jax.random.split(kk, len(leaves))
+        out = [x + jitter * jnp.std(x)
+               * jax.random.normal(j, x.shape, jnp.float32).astype(x.dtype)
+               for x, j in zip(leaves, keys)]
+        return jax.tree.unflatten(treedef, out)
+
+    return tuple(noised(params, kk) for kk in jax.random.split(key, k))
+
+
+def corrupt_replica(replicas: tuple, index: int, key: jax.Array,
+                    scale: float = 20.0) -> tuple:
+    """Replace replica ``index``'s parameters with large Gaussian noise —
+    the garbage-logits fault the robust-decode tests and benchmarks inject."""
+    leaves, treedef = jax.tree.flatten(replicas[index])
+    keys = jax.random.split(key, len(leaves))
+    garbage = jax.tree.unflatten(treedef, [
+        scale * jax.random.normal(kk, x.shape, jnp.float32).astype(x.dtype)
+        for x, kk in zip(leaves, keys)])
+    return tuple(garbage if i == index else r
+                 for i, r in enumerate(replicas))
+
+
+class RobustDecoder:
+    """Aggregation + reputation policy for k-replica decode.
+
+    Owns the rule instance and the mutable reputation state; the jit-traced
+    math lives in :meth:`aggregate` (pure), the host-side state threading in
+    :meth:`observe`.  The engine holds one of these and calls ``aggregate``
+    inside its jitted decode step.
+    """
+
+    def __init__(self, rule: str = "phocas", k: int = 3,
+                 b: Optional[int] = None,
+                 defense: Optional[DefenseConfig] = None,
+                 backend: str = "auto"):
+        if k < 2:
+            raise ValueError(f"replicated decode needs k >= 2, got {k}")
+        bmax = (k + 1) // 2 - 1
+        self.b = bmax if b is None else b
+        if not 0 <= self.b <= bmax:
+            raise ValueError(f"need 0 <= b <= (k+1)//2-1 = {bmax} for k={k} "
+                             f"replicas, got b={self.b}")
+        self.k = k
+        self.rule_name = rule
+        self.rule = make_rule(rule, RuleParams(b=self.b, q=self.b,
+                                               backend=backend))
+        self.defense = defense or DefenseConfig()
+        self.rep_state = init_reputation(k)
+
+    # -- jit-traced ----------------------------------------------------------
+
+    def aggregate(self, logits: jax.Array, rep_state: dict
+                  ) -> Tuple[jax.Array, jax.Array, dict]:
+        """(k, B, V) per-replica logits -> ((B, V) aggregate, (k,) scores,
+        updated reputation state).  Pure — called inside the engine's jitted
+        decode step.  Scores observe the raw matrix; the aggregate reads the
+        reputation-gated matrix (ejected replicas replaced by the median)."""
+        k, B, V = logits.shape
+        mat = logits.reshape(k, B * V).astype(jnp.float32)
+        agg, scores = self.rule.reduce_gated_with_scores(
+            mat, rep_state["active"])
+        new_state = update_reputation(rep_state, scores, self.defense)
+        return agg.reshape(B, V), scores, new_state
+
+    # -- host-side -----------------------------------------------------------
+
+    def observe(self, new_state: dict, scores, telemetry=None,
+                step: int = 0) -> None:
+        """Adopt the post-step reputation state; mirror it to telemetry."""
+        self.rep_state = new_state
+        if telemetry is not None:
+            telemetry.log("robust_decode", step,
+                          rule=self.rule_name, k=self.k, b=self.b,
+                          scores=scores,
+                          reputation=new_state["reputation"],
+                          active=new_state["active"])
+
+    @property
+    def active(self):
+        return self.rep_state["active"]
+
+    def ejected_replicas(self) -> list:
+        import numpy as np
+        return [int(i) for i, a in
+                enumerate(np.asarray(self.rep_state["active"])) if a == 0.0]

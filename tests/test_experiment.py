@@ -156,6 +156,26 @@ def test_legacy_embedded_attack_is_honored():
 @pytest.mark.parametrize("rule", ["mean", "phocas"])
 @pytest.mark.parametrize("attack", ["none", "gaussian"])
 def test_topology_rule_attack_smoke_grid(topology, rule, attack):
+    if topology == "serve":
+        # inference topology: decodes an arch-zoo model instead of training
+        spec = small_spec(
+            topology="serve",
+            model=ModelSpec(kind="arch", arch="granite-8b-reduced"),
+            data=DataSpec(kind="tokens"),
+            robust=RobustConfig(rule=rule, b=1),
+            attack=AttackConfig(name=attack, num_byzantine=1),
+            topology_params={"replicas": 3, "max_slots": 2,
+                             "max_seq_len": 16, "num_requests": 2,
+                             "arrival_rate": 4.0, "prompt_len": 4,
+                             "max_new_tokens": 4},
+            steps=200)
+        result = run_experiment(spec)
+        assert result.spec is spec
+        m = result.final_metrics
+        assert m["completed"] == 2
+        assert m["tokens"] == 2 * 4
+        assert np.isfinite(m["tokens_per_sec"])
+        return
     spec = small_spec(
         topology=topology,
         topology_params=({"staleness": 2} if topology == "async_ps" else {}),
@@ -272,3 +292,66 @@ def test_result_final_helpers_and_telemetry(tmp_path):
     recs = read_jsonl(tel)
     assert len(recs) == spec.steps
     assert all(r["kind"] == "streaming" for r in recs)
+
+
+# ---------------------------------------------------------------------------
+# sweep + scenario-keyed result cache
+# ---------------------------------------------------------------------------
+
+def test_sweep_cartesian_product_and_names():
+    from repro.experiment import sweep
+    cells = sweep(small_spec(), {
+        "robust.rule": ["phocas", "trmean"],
+        "topology_params.staleness": [0, 4],
+    }, validate=False)
+    assert len(cells) == 4
+    assert [c.robust.rule for c in cells] == ["phocas", "phocas",
+                                              "trmean", "trmean"]
+    assert cells[0].name == "t[rule=phocas,staleness=0]"
+    assert cells[0].topology_params["staleness"] == 0
+    assert cells[3].topology_params["staleness"] == 4
+    # base spec untouched
+    assert small_spec().topology_params.get("staleness") is None
+
+
+def test_sweep_rejects_bad_path_and_invalid_cells():
+    from repro.experiment import sweep
+    with pytest.raises((AttributeError, TypeError, KeyError)):
+        sweep(small_spec(), {"robust.nonsense": [1]}, validate=False)
+    with pytest.raises(SpecError):  # validate-all-up-front
+        sweep(small_spec(), {"robust.rule": ["phocas", "no-such-rule"]})
+
+
+def test_scenario_key_tracks_content():
+    from repro.experiment import scenario_key
+    a, b = small_spec(), small_spec()
+    assert scenario_key(a) == scenario_key(b)
+    assert scenario_key(a) != scenario_key(small_spec(steps=4))
+
+
+def test_run_cached_hit_and_mismatch(tmp_path):
+    from repro.experiment import run_cached, scenario_key
+    spec = small_spec(attack=AttackConfig(name="none"))
+    cache = str(tmp_path / "cache")
+
+    calls = []
+
+    def runner(s, **kw):
+        calls.append(s)
+        return run_experiment(s, **kw)
+
+    first = run_cached(spec, cache, runner=runner)
+    again = run_cached(spec, cache, runner=runner)
+    assert len(calls) == 1                       # second call was a hit
+    assert again.params is None                  # cached results drop params
+    assert again.final_metrics == pytest.approx(first.final_metrics)
+    assert [h["loss"] for h in again.history] == \
+           pytest.approx([h["loss"] for h in first.history])
+    assert len(glob.glob(os.path.join(cache, "*.json"))) == 1
+
+    # a different spec gets its own entry, not a collision
+    other = small_spec(attack=AttackConfig(name="none"), steps=4)
+    assert scenario_key(other) != scenario_key(spec)
+    run_cached(other, cache, runner=runner)
+    assert len(calls) == 2
+    assert len(glob.glob(os.path.join(cache, "*.json"))) == 2
