@@ -25,8 +25,8 @@ REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 def _run(name, fn, rows_to_csv):
     # Shared converter with the telemetry JSONL records: jax/numpy values
-    # become plain types, non-finite floats become repr strings, so the
-    # artifact stays strict JSON for any consumer.
+    # become plain types, NaN becomes null and ±inf clamps to ±1e308, so
+    # the artifact stays strict JSON with all-numeric columns.
     from repro.defense.telemetry import jsonify
     t0 = time.time()
     rows = fn()
@@ -126,6 +126,14 @@ def main(full: bool = False, only: str = "") -> None:
              lambda rows: [
                  f"analysis/{r['rule']},0,count={r['count']}"
                  for r in rows if r["count"]] or ["analysis/clean,0,count=0"])
+
+    if pick("obs"):
+        from benchmarks.obs_smoke import main as f
+        _run("obs", lambda: f(),
+             lambda rows: [
+                 f"obs/sync_ps,0,records={r['records']};"
+                 f"series={r['series']};spans={r['span_observations']};"
+                 f"qhat={r['q_hat']}" for r in rows])
 
     if pick("serve"):
         from benchmarks.bench_serve import main as f

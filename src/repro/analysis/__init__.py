@@ -13,7 +13,10 @@ tooling that keeps those invariants honest as the repo grows:
 * ``axes``      — collective axis-name + shard_map spec checks
                   (AXIS001..AXIS002);
 * ``layout``    — Pallas block-layout / cap-constant checks
-                  (PALLAS001..PALLAS002).
+                  (PALLAS001..PALLAS002);
+* ``telemetry_kinds`` — telemetry record kinds at ``.log``/``.emit`` call
+                  sites must be registered in ``repro/obs/schema.py``
+                  (CONTRACT010).
 
 Run it as ``python -m repro.analysis [paths]`` (non-zero exit on errors),
 or programmatically via :func:`run_analysis`.  Audited false positives are

@@ -1,6 +1,7 @@
 """File collection + analyzer orchestration for ``python -m repro.analysis``.
 
-The AST analyzers (prng/axes/layout) are pure per-file passes; the contract
+The AST analyzers (prng/axes/layout/telemetry_kinds) are pure per-file
+passes; the contract
 analyzer imports the live registries.  Directory arguments are walked
 recursively for ``*.py``, skipping ``__pycache__``, hidden directories, and
 anything under a ``fixtures`` directory — the seeded-violation corpus in
@@ -13,7 +14,7 @@ import ast
 import os
 from typing import Dict, List, Sequence, Tuple
 
-from repro.analysis import axes, layout, prng
+from repro.analysis import axes, layout, prng, telemetry_kinds
 from repro.analysis.findings import Finding, apply_noqa
 
 _SKIP_DIR_PARTS = frozenset({"__pycache__", "fixtures"})
@@ -69,6 +70,7 @@ def analyze_file(path: str, source: str) -> List[Finding]:
                                  library_code=_is_library_code(path)))
     findings.extend(axes.analyze(path, tree))
     findings.extend(layout.analyze(path, tree))
+    findings.extend(telemetry_kinds.analyze(path, tree))
     return findings
 
 

@@ -60,6 +60,8 @@ RULES: Dict[str, Tuple[str, str]] = {
     "CONTRACT009": ("error", "serving paged-cache invariant violated "
                              "(block size vs Pallas lane constants, or the "
                              "reserved null block handed out)"),
+    "CONTRACT010": ("error", "telemetry .log/.emit call site uses a record "
+                             "kind not registered in repro/obs/schema.py"),
 }
 
 

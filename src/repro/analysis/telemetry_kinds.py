@@ -1,0 +1,60 @@
+"""Telemetry record-kind analyzer (rule CONTRACT010).
+
+Every record on the observability bus carries a ``kind`` that consumers
+dispatch on (``repro/obs/schema.py`` is the registry).  A typo'd kind at a
+``TelemetryWriter.log`` / ``Recorder.emit`` call site doesn't fail at
+runtime — the writer happily serialises it — it silently forks the record
+stream away from every reader.  CONTRACT010 pins the literal first
+argument of each ``.log(...)``/``.emit(...)`` call whose shape matches the
+bus signature (``.log(<str literal>, <step>, ...)``) to the SCHEMA
+registry.
+
+Scope is deliberately narrow to avoid false positives on unrelated
+``.log`` methods (math, loggers): only attribute calls named ``log`` or
+``emit`` with at least two positional arguments whose FIRST argument is a
+string literal are checked.  ``logging``-style calls pass a format string
+(not a registered kind) but also take the message first and no step —
+they virtually never collide; a genuine collision can be silenced with
+``# repro: noqa[CONTRACT010]``.
+"""
+from __future__ import annotations
+
+import ast
+from typing import FrozenSet, List
+
+from repro.analysis.findings import Finding
+
+_METHOD_NAMES = frozenset({"log", "emit"})
+
+
+def known_kinds() -> FrozenSet[str]:
+    """The registered kind vocabulary (import-resolved lazily so the
+    analyzer itself has no import-time dependency on the obs package)."""
+    from repro.obs.schema import SCHEMA
+    return frozenset(SCHEMA)
+
+
+def analyze(path: str, tree: ast.Module) -> List[Finding]:
+    kinds = known_kinds()
+    findings: List[Finding] = []
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        fn = node.func
+        if not (isinstance(fn, ast.Attribute) and fn.attr in _METHOD_NAMES):
+            continue
+        if len(node.args) < 2:
+            continue
+        first = node.args[0]
+        if not (isinstance(first, ast.Constant)
+                and isinstance(first.value, str)):
+            continue
+        kind = first.value
+        if kind not in kinds:
+            findings.append(Finding(
+                rule="CONTRACT010", path=path, line=node.lineno,
+                message=f".{fn.attr}() call uses unregistered telemetry "
+                        f"kind {kind!r} (known: {', '.join(sorted(kinds))})",
+                hint="register the kind in repro/obs/schema.py SCHEMA, or "
+                     "fix the typo at the call site"))
+    return findings

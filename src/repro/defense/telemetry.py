@@ -22,15 +22,29 @@ from typing import IO, Optional
 import numpy as np
 
 
+#: Clamp for ±inf: the largest float64 that survives a strict-JSON
+#: round-trip as a number (repr → 1e+308 → float).  Numeric consumers
+#: (pandas, jq, the reporter) read it as "off the scale" instead of
+#: choking on a string.
+INF_CLAMP = 1e308
+
+
 def jsonify(value):
-    """Best-effort conversion of jax/numpy/py values to JSON-safe types
-    (non-finite floats become repr strings so the output stays strict
-    JSON).  Shared by the telemetry writer and the ``BENCH_<name>.json``
-    benchmark artifacts."""
+    """Best-effort conversion of jax/numpy/py values to JSON-safe types.
+
+    Non-finite floats stay *numeric-or-null* so downstream consumers never
+    meet a surprise string in a number column: NaN → ``null`` (the JSON
+    spelling of "no value"), ±inf → ``±1e308`` (clamped, still ordered
+    correctly against every finite reading).  Shared by the telemetry
+    writer and the ``BENCH_<name>.json`` benchmark artifacts."""
     if value is None or isinstance(value, (bool, int, str)):
         return value
     if isinstance(value, float):
-        return value if np.isfinite(value) else repr(value)
+        if np.isfinite(value):
+            return value
+        if np.isnan(value):
+            return None
+        return INF_CLAMP if value > 0 else -INF_CLAMP
     if isinstance(value, dict):
         return {str(k): jsonify(v) for k, v in value.items()}
     if isinstance(value, (list, tuple)):

@@ -51,6 +51,10 @@ class Plan:
     checkpoint_every: int
     telemetry_path: Optional[str]
     verbose: bool = False
+    # Observability switches (repro.obs.ObsConfig | None).  Lives on the
+    # Plan, not the spec: ScenarioSpec stays JSON-canonical, and whether a
+    # run is instrumented is a property of the invocation, not the cell.
+    obs: Any = None
 
 
 @dataclasses.dataclass
@@ -91,7 +95,8 @@ class ExperimentResult:
         return [(r["step"], r["eval"]) for r in self.history if "eval" in r]
 
 
-def resolve(spec: ScenarioSpec, *, verbose: bool = False) -> Plan:
+def resolve(spec: ScenarioSpec, *, verbose: bool = False,
+            obs: Any = None) -> Plan:
     """Validate ``spec`` and build the runtime bundle (model, data, mesh)."""
     spec.validate()
     m = spec.num_workers
@@ -136,14 +141,19 @@ def resolve(spec: ScenarioSpec, *, verbose: bool = False) -> Plan:
         checkpoint_every=spec.checkpoint_every,
         telemetry_path=telemetry or None,
         verbose=verbose,
+        obs=obs,
     )
 
 
-def run_experiment(spec: ScenarioSpec, *,
-                   verbose: bool = False) -> ExperimentResult:
+def run_experiment(spec: ScenarioSpec, *, verbose: bool = False,
+                   obs: Any = None) -> ExperimentResult:
     """THE training entry point: validate + resolve ``spec``, dispatch to
-    its topology plugin, return the :class:`ExperimentResult`."""
-    plan = resolve(spec, verbose=verbose)
+    its topology plugin, return the :class:`ExperimentResult`.
+
+    ``obs`` (a ``repro.obs.ObsConfig`` or None) arms the metrics registry
+    and span tracer for this run; the launch CLIs map their ``--metrics``/
+    ``--profile-dir`` flags onto it."""
+    plan = resolve(spec, verbose=verbose, obs=obs)
     return make_topology(plan.topology).run(plan)
 
 
@@ -197,7 +207,7 @@ def plan_from_parts(*, model, batch_fn, robust_cfg, opt_cfg,
                     checkpoint_path: Optional[str] = None,
                     checkpoint_every: int = 0,
                     telemetry_path: Optional[str] = None,
-                    verbose: bool = False) -> Plan:
+                    verbose: bool = False, obs: Any = None) -> Plan:
     """Build a :class:`Plan` from already-constructed runtime objects.
 
     The deprecated driver shims use this: they hold a live model/batch_fn
@@ -211,4 +221,4 @@ def plan_from_parts(*, model, batch_fn, robust_cfg, opt_cfg,
         mesh=mesh, num_workers=num_workers, steps=steps, seed=seed,
         record_every=max(record_every, 1),
         checkpoint_path=checkpoint_path, checkpoint_every=checkpoint_every,
-        telemetry_path=telemetry_path, verbose=verbose)
+        telemetry_path=telemetry_path, verbose=verbose, obs=obs)

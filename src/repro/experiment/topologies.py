@@ -27,12 +27,58 @@ import jax.numpy as jnp
 
 from repro.core import registry
 from repro.data.pipeline import make_worker_batches
-from repro.defense.telemetry import TelemetryWriter
 from repro.experiment.runner import ExperimentResult, Plan
 from repro.experiment.spec import SpecError
 from repro.experiment.topology import Topology, register_topology
+from repro.obs.metrics import make_recorder
 from repro.optim.optimizers import init_opt_state
 from repro.train.streaming import STREAMING_ATTACKS
+
+
+def _mask_flips(rec, prev, now, stream: str):
+    """Count active-mask transitions into ejection/readmission counters;
+    returns the new mask (host list).  The ejection *timeline* lives in
+    the JSONL records; these counters are the at-a-glance Prometheus
+    view the same data."""
+    now = [bool(x) for x in now]
+    if prev is not None and len(prev) == len(now):
+        ej = sum(1 for w, n in zip(prev, now) if w and not n)
+        re = sum(1 for w, n in zip(prev, now) if n and not w)
+        if ej:
+            rec.count("ejections", ej, stream=stream)
+        if re:
+            rec.count("readmissions", re, stream=stream)
+    return now
+
+
+def _defense_gauges(rec, *, rule_name: str, m: int, q_hat: int,
+                    b: int, q: int) -> None:
+    """q̂ + Δ-resilience-margin gauges for one defended step.
+
+    ``resilience_margin`` is the paper-level safety slack: how many more
+    Byzantine workers the configured rule tolerates beyond the detector's
+    current estimate (tolerance − q̂; negative means the run has left the
+    rule's proven envelope).  ``delta_bound`` is the unit-variance Δ bound
+    at (m, q̂, b) from core/bounds.py, when the theory defines one."""
+    rule_meta = registry.get_rule(rule_name)
+    tolerance = b if rule_meta.uses_b else q
+    rec.gauge("q_hat", q_hat)
+    rec.gauge("resilience_margin", tolerance - q_hat, rule=rule_name)
+    from repro.defense.detector import _delta_bound
+    bound = _delta_bound(rule_name, m, q_hat, b, 1.0)
+    if bound is not None:
+        rec.gauge("delta_bound_unit_var", bound, rule=rule_name)
+
+
+def _profile_step_cost(rec, plan: Plan, step_fn, args) -> None:
+    """One-shot FLOPs/bytes gauges for the compiled train step (AOT lower
+    + compile — an extra compile, so gated on obs.profile_cost)."""
+    if not (rec.metrics_enabled and plan.obs is not None
+            and getattr(plan.obs, "profile_cost", False)):
+        return
+    from repro.obs.profile import compiled_cost
+    for name, v in compiled_cost(step_fn, *args).items():
+        rec.gauge(f"step_{name}", v)
 
 
 @register_topology
@@ -83,43 +129,70 @@ class SyncPS(Topology):
         key = jax.random.PRNGKey(plan.seed + 1)
         history: list = []
         metrics: dict = {}
+        prev_active = None
+        profiled_cost = False
         t0 = time.time()
-        with TelemetryWriter(plan.telemetry_path) as tel:
+        with make_recorder(plan.telemetry_path, plan.obs) as rec:
             for step in range(plan.steps):
                 batch = make_worker_batches(plan.batch_fn(step), m)
                 key, sk = jax.random.split(key)
                 if defense_state is not None:
-                    (params, opt_state, defense_state, metrics) = step_fn(
-                        params, opt_state, batch, sk, defense_state)
-                    tel.log("train", step,
+                    if not profiled_cost:
+                        profiled_cost = True
+                        _profile_step_cost(rec, plan, step_fn,
+                                           (params, opt_state, batch, sk,
+                                            defense_state))
+                    with rec.span("train_step", step_num=step,
+                                  rule=robust_cfg.rule) as sp:
+                        (params, opt_state, defense_state, metrics) = \
+                            sp.sync(step_fn(params, opt_state, batch, sk,
+                                            defense_state))
+                    rec.log("train", step,
                             loss=metrics["loss"],
                             grad_norm=metrics["grad_norm"],
                             suspicion=metrics["suspicion"],
                             reputation=metrics["reputation"],
                             active=metrics["active"],
                             q_hat=metrics["q_hat"])
+                    if rec.metrics_enabled:
+                        prev_active = _mask_flips(
+                            rec, prev_active, metrics["active"], "train")
+                        _defense_gauges(
+                            rec, rule_name=robust_cfg.rule, m=m,
+                            q_hat=int(metrics["q_hat"]), b=robust_cfg.b,
+                            q=robust_cfg.q)
                 else:
-                    params, opt_state, metrics = step_fn(
-                        params, opt_state, batch, sk)
+                    if not profiled_cost:
+                        profiled_cost = True
+                        _profile_step_cost(rec, plan, step_fn,
+                                           (params, opt_state, batch, sk))
+                    with rec.span("train_step", step_num=step,
+                                  rule=robust_cfg.rule) as sp:
+                        params, opt_state, metrics = sp.sync(step_fn(
+                            params, opt_state, batch, sk))
+                rec.count("steps", topology=self.name)
 
                 if step % plan.record_every == 0 or step == plan.steps - 1:
-                    rec = {"step": step, "loss": float(metrics["loss"]),
+                    row = {"step": step, "loss": float(metrics["loss"]),
                            "grad_norm": float(metrics["grad_norm"]),
                            "wall": time.time() - t0}
                     if "q_hat" in metrics:
-                        rec["q_hat"] = int(metrics["q_hat"])
-                        rec["n_active"] = int(jnp.sum(metrics["active"]))
+                        row["q_hat"] = int(metrics["q_hat"])
+                        row["n_active"] = int(jnp.sum(metrics["active"]))
                     if plan.eval_fn is not None:
-                        rec["eval"] = float(plan.eval_fn(params))
-                    history.append(rec)
+                        row["eval"] = float(plan.eval_fn(params))
+                    history.append(row)
+                    if rec.metrics_enabled:
+                        from repro.obs.profile import sample_into
+                        sample_into(rec)
                     if plan.verbose:
-                        msg = (f"step {step:5d}  loss {rec['loss']:.4f}  "
-                               f"gnorm {rec['grad_norm']:.3e}")
-                        if "q_hat" in rec:
-                            msg += (f"  qhat {rec['q_hat']}  "
-                                    f"active {rec['n_active']}")
-                        if "eval" in rec:
-                            msg += f"  eval {rec['eval']:.4f}"
+                        msg = (f"step {step:5d}  loss {row['loss']:.4f}  "
+                               f"gnorm {row['grad_norm']:.3e}")
+                        if "q_hat" in row:
+                            msg += (f"  qhat {row['q_hat']}  "
+                                    f"active {row['n_active']}")
+                        if "eval" in row:
+                            msg += f"  eval {row['eval']:.4f}"
                         print(msg, flush=True)
 
                 if (plan.checkpoint_path and plan.checkpoint_every and step
@@ -152,18 +225,22 @@ class SyncPS(Topology):
                             history.append(
                                 {"step": step, "adapted_b": new_b,
                                  "adapted_q": new_q, "q_hat": q_hat})
-                            tel.log("adapt", step, b=new_b, q=new_q,
+                            rec.log("adapt", step, b=new_b, q=new_q,
                                     q_hat=q_hat)
+                            rec.count("adaptations")
                             if plan.verbose:
                                 print(f"step {step:5d}  [adapt] "
                                       f"q_hat={q_hat} -> b={new_b} "
                                       f"q={new_q} (re-jit)", flush=True)
+            wall = time.time() - t0
+            rec.gauge("steps_per_sec", plan.steps / max(wall, 1e-9),
+                      topology=self.name)
 
         return ExperimentResult(
             spec=plan.spec, history=history, params=params,
             opt_state=opt_state, defense_state=defense_state,
             final_metrics=_scalarize(metrics), robust_cfg=robust_cfg,
-            wall_time=time.time() - t0)
+            wall_time=wall)
 
 
 @register_topology
@@ -190,36 +267,50 @@ class AsyncPS(Topology):
         state = init_fn(key) if init_state is None else init_state
         history: list = []
         metrics: dict = {}
+        prev_active = None
         t0 = time.time()
-        with TelemetryWriter(plan.telemetry_path) as tel:
+        with make_recorder(plan.telemetry_path, plan.obs) as rec:
             for i in range(plan.steps):
                 batch = make_worker_batches(plan.batch_fn(i), m)
-                state, metrics = step_fn(state, batch,
-                                         jax.random.fold_in(key, i))
+                with rec.span("async_step", step_num=i,
+                              rule=plan.robust_cfg.rule) as sp:
+                    state, metrics = sp.sync(step_fn(
+                        state, batch, jax.random.fold_in(key, i)))
+                rec.count("steps", topology=self.name)
                 if plan.defense_cfg is not None:
-                    tel.log("async", i,
+                    rec.log("async", i,
                             staleness_frac=metrics["staleness_frac"],
                             suspicion=metrics["suspicion"],
                             reputation=metrics["reputation"],
                             active=metrics["active"],
                             q_hat=metrics["q_hat"])
+                    if rec.metrics_enabled:
+                        prev_active = _mask_flips(
+                            rec, prev_active, metrics["active"], "async")
+                        _defense_gauges(
+                            rec, rule_name=plan.robust_cfg.rule, m=m,
+                            q_hat=int(metrics["q_hat"]),
+                            b=plan.robust_cfg.b, q=plan.robust_cfg.q)
                 if i % plan.record_every == 0 or i == plan.steps - 1:
-                    rec = {"step": i, "staleness_frac":
+                    row = {"step": i, "staleness_frac":
                            float(metrics["staleness_frac"])}
                     if "q_hat" in metrics:
-                        rec["q_hat"] = int(metrics["q_hat"])
+                        row["q_hat"] = int(metrics["q_hat"])
                     if plan.eval_fn is not None:
-                        rec["eval"] = float(plan.eval_fn(state["params"]))
-                    history.append(rec)
-                    if plan.verbose and "eval" in rec:
-                        print(f"step {i:5d}  eval {rec['eval']:.4f}",
+                        row["eval"] = float(plan.eval_fn(state["params"]))
+                    history.append(row)
+                    if plan.verbose and "eval" in row:
+                        print(f"step {i:5d}  eval {row['eval']:.4f}",
                               flush=True)
+            wall = time.time() - t0
+            rec.gauge("steps_per_sec", plan.steps / max(wall, 1e-9),
+                      topology=self.name)
 
         return ExperimentResult(
             spec=plan.spec, history=history, params=state["params"],
             opt_state=state["opt"], defense_state=state.get("defense"),
             final_metrics=_scalarize(metrics), robust_cfg=plan.robust_cfg,
-            wall_time=time.time() - t0)
+            wall_time=wall)
 
 
 @register_topology
@@ -246,29 +337,36 @@ class Streaming(Topology):
         history: list = []
         metrics: dict = {}
         t0 = time.time()
-        with TelemetryWriter(plan.telemetry_path) as tel:
+        with make_recorder(plan.telemetry_path, plan.obs) as rec:
             for i in range(plan.steps):
                 batch = make_worker_batches(plan.batch_fn(i), m)
-                params, opt_state, metrics = step_fn(
-                    params, opt_state, batch, jax.random.fold_in(key, i))
+                with rec.span("streaming_step", step_num=i,
+                              rule=plan.robust_cfg.rule) as sp:
+                    params, opt_state, metrics = sp.sync(step_fn(
+                        params, opt_state, batch,
+                        jax.random.fold_in(key, i)))
+                rec.count("steps", topology=self.name)
                 extra = ({"suspicion": metrics["suspicion"]}
                          if "suspicion" in metrics else {})
-                tel.log("streaming", i, loss=metrics["loss"], **extra)
+                rec.log("streaming", i, loss=metrics["loss"], **extra)
                 if i % plan.record_every == 0 or i == plan.steps - 1:
-                    rec = {"step": i, "loss": float(metrics["loss"])}
+                    row = {"step": i, "loss": float(metrics["loss"])}
                     if plan.eval_fn is not None:
-                        rec["eval"] = float(plan.eval_fn(params))
-                    history.append(rec)
+                        row["eval"] = float(plan.eval_fn(params))
+                    history.append(row)
                     if plan.verbose:
-                        msg = f"step {i:5d}  loss {rec['loss']:.4f}"
-                        if "eval" in rec:
-                            msg += f"  eval {rec['eval']:.4f}"
+                        msg = f"step {i:5d}  loss {row['loss']:.4f}"
+                        if "eval" in row:
+                            msg += f"  eval {row['eval']:.4f}"
                         print(msg, flush=True)
+            wall = time.time() - t0
+            rec.gauge("steps_per_sec", plan.steps / max(wall, 1e-9),
+                      topology=self.name)
 
         return ExperimentResult(
             spec=plan.spec, history=history, params=params,
             opt_state=opt_state, final_metrics=_scalarize(metrics),
-            robust_cfg=plan.robust_cfg, wall_time=time.time() - t0)
+            robust_cfg=plan.robust_cfg, wall_time=wall)
 
 
 def _scalarize(metrics: dict) -> dict:
@@ -372,10 +470,10 @@ class Serve(Topology):
 
         history: list = []
         t0 = time.time()
-        with TelemetryWriter(plan.telemetry_path) as tel:
+        with make_recorder(plan.telemetry_path, plan.obs) as rec:
             engine = ServeEngine(
                 model, params, max_slots=max_slots, max_seq_len=max_seq_len,
-                block_tokens=block_tokens, decoder=decoder, telemetry=tel)
+                block_tokens=block_tokens, decoder=decoder, telemetry=rec)
 
             # Deterministic Poisson arrivals in engine-step time.
             rng = np.random.default_rng(plan.seed)

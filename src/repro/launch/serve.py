@@ -32,6 +32,16 @@ from repro.models import build_model
 from repro.serve import generate
 
 
+def _obs_config(args):
+    """ObsConfig from the --metrics/--profile-dir flags, or None."""
+    if not (args.metrics or args.profile_dir):
+        return None
+    from repro.obs import ObsConfig
+    return ObsConfig(enabled=True, trace=True,
+                     metrics_path=args.metrics or None,
+                     profile_dir=args.profile_dir or None)
+
+
 def _run_dense(args, model, params, key):
     prompts = jax.random.randint(key, (args.batch, args.prompt_len), 0,
                                  model.cfg.vocab_size)
@@ -40,25 +50,31 @@ def _run_dense(args, model, params, key):
         from repro.launch.mesh import make_host_mesh
         d, m = (int(x) for x in args.mesh.split("x"))
         mesh = make_host_mesh(data=d, model=m)
+    from repro.obs.profile import profile_trace
     t0 = time.time()
-    out = generate(model, params, prompts, args.new_tokens, mesh=mesh)
+    with profile_trace(args.profile_dir or None):
+        out = generate(model, params, prompts, args.new_tokens, mesh=mesh)
+        jax.block_until_ready(out)
     dt = time.time() - t0
     tok_s = args.batch * args.new_tokens / dt
     print(f"[serve] {args.arch}: generated {out.shape} in {dt:.2f}s "
           f"({tok_s:.1f} tok/s)")
-    if args.telemetry:
-        from repro.defense.telemetry import TelemetryWriter
-        with TelemetryWriter(args.telemetry) as tel:
-            tel.log("serve", 0, arch=args.arch, batch=args.batch,
+    if args.telemetry or args.metrics:
+        from repro.obs import make_recorder
+        with make_recorder(args.telemetry or None, _obs_config(args)) as rec:
+            rec.log("serve", 0, arch=args.arch, batch=args.batch,
                     prompt_len=args.prompt_len,
                     new_tokens=args.new_tokens, wall_s=dt, tok_s=tok_s,
                     mesh=args.mesh or "none")
+            rec.gauge("serve_tokens_per_sec", tok_s)
+        if args.metrics:
+            print(f"[serve] wrote metrics snapshot {args.metrics}")
     print(out[:, args.prompt_len:])
 
 
 def _run_engine(args, model, params, key):
     import numpy as np
-    from repro.defense.telemetry import TelemetryWriter
+    from repro.obs import make_recorder
     from repro.serve import (RobustDecoder, ServeEngine, corrupt_replica,
                              make_replicas)
 
@@ -74,18 +90,24 @@ def _run_engine(args, model, params, key):
 
     max_seq_len = args.prompt_len + args.new_tokens
     rng = np.random.default_rng(args.seed)
-    with TelemetryWriter(args.telemetry or None) as tel:
+    with make_recorder(args.telemetry or None, _obs_config(args)) as rec:
         engine = ServeEngine(model, params, max_slots=args.max_batch,
                              max_seq_len=max_seq_len, decoder=decoder,
-                             telemetry=tel)
+                             telemetry=rec)
         for _ in range(args.batch):
             engine.submit(
                 rng.integers(0, model.cfg.vocab_size,
                              (args.prompt_len,)).tolist(),
                 args.new_tokens)
         t0 = time.time()
-        done = engine.run()
+        from repro.obs.profile import profile_trace
+        with profile_trace(args.profile_dir or None):
+            done = engine.run()
         dt = time.time() - t0
+        rec.gauge("serve_tokens_per_sec",
+                  sum(len(r.generated) for r in done) / max(dt, 1e-9))
+    if args.metrics:
+        print(f"[serve] wrote metrics snapshot {args.metrics}")
     toks = sum(len(r.generated) for r in done)
     lat = sorted(r.latency_ms() for r in done)
     mode = (f"robust k={args.replicas} {args.robust_rule}"
@@ -129,6 +151,13 @@ def main():
                     help="JSONL path for serve + robust-decode score "
                          "telemetry (shared repro.defense.telemetry "
                          "format)")
+    ap.add_argument("--metrics", default="",
+                    help="arm the obs layer: write a Prometheus-style "
+                         "exposition snapshot to this path at run end "
+                         "(implies span tracing; see repro.obs)")
+    ap.add_argument("--profile-dir", default="",
+                    help="capture a jax.profiler trace of the run into "
+                         "this directory (view with TensorBoard)")
     args = ap.parse_args()
 
     cfg = get_arch(args.arch)

@@ -135,6 +135,13 @@ def main():
                     help="EMA decay of the worker reputation state")
     ap.add_argument("--telemetry", default="",
                     help="JSONL path for per-step defense telemetry")
+    ap.add_argument("--metrics", default="",
+                    help="arm the obs layer: write a Prometheus-style "
+                         "exposition snapshot to this path at run end "
+                         "(implies span tracing; see repro.obs)")
+    ap.add_argument("--profile-dir", default="",
+                    help="capture a jax.profiler trace of the run into "
+                         "this directory (view with TensorBoard)")
     args = ap.parse_args()
     if args.use_kernels:
         print("[train] --use-kernels is deprecated; use --backend pallas")
@@ -155,7 +162,20 @@ def main():
     except SpecError as e:
         ap.error(str(e))
 
-    result = run_experiment(spec, verbose=True)
+    obs = None
+    if args.metrics or args.profile_dir:
+        from repro.obs import ObsConfig
+        obs = ObsConfig(enabled=True, trace=True,
+                        metrics_path=args.metrics or None,
+                        profile_dir=args.profile_dir or None)
+
+    from repro.obs.profile import profile_trace
+    with profile_trace(args.profile_dir or None):
+        result = run_experiment(spec, verbose=True, obs=obs)
+    if args.metrics:
+        print(f"[train] wrote metrics snapshot {args.metrics}")
+    if args.profile_dir:
+        print(f"[train] wrote profiler trace under {args.profile_dir}")
     n = sum(x.size for x in jax.tree.leaves(result.params))
     print(f"[train] {spec.name}: {n:,} params, topology={spec.topology} "
           f"rule={spec.robust.rule} b={result.robust_cfg.b} "

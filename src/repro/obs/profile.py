@@ -1,0 +1,98 @@
+"""Profiling hooks (repro.obs): compiled-cost sampling, device memory,
+and the ``--profile-dir`` trace window.
+
+These reuse the same XLA surfaces the dryrun CLI reads (``lower() →
+compile() → cost_analysis()`` and ``memory_stats()``), but packaged for
+a live run: the Recorder samples FLOPs/bytes once per compiled step
+function and device memory per log interval, so the numbers land next to
+loss/latency in the same JSONL stream instead of in a separate dryrun
+report.  Everything degrades to empty dicts on backends that don't
+implement the introspection APIs — profiling must never fail a run.
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Dict, Optional
+
+
+def compiled_cost(jitted_fn, *args) -> Dict[str, float]:
+    """FLOPs / bytes-accessed estimates for one compiled call.
+
+    Lowers and compiles ``jitted_fn(*args)`` (AOT — a one-off cost, so
+    call this once per distinct step function, not per step) and reads
+    XLA's ``cost_analysis()``.  Returns ``{}`` when the backend doesn't
+    report costs.
+    """
+    try:
+        compiled = jitted_fn.lower(*args).compile()
+        ca = compiled.cost_analysis() or {}
+        # jax<=0.4 returns a one-element list of dicts.
+        if isinstance(ca, (list, tuple)):
+            ca = ca[0] if ca else {}
+    except Exception:
+        return {}
+    out = {}
+    for key, name in (("flops", "flops"), ("bytes accessed", "bytes")):
+        v = ca.get(key)
+        if v is not None:
+            out[name] = float(v)
+    return out
+
+
+def device_memory_stats() -> Dict[str, float]:
+    """Live/peak device memory in bytes for device 0, or ``{}`` (the CPU
+    backend typically has no allocator stats)."""
+    try:
+        import jax
+        dev = jax.devices()[0]
+        stats = dev.memory_stats()
+    except Exception:
+        return {}
+    if not stats:
+        return {}
+    out = {}
+    for key, name in (("bytes_in_use", "bytes_in_use"),
+                      ("peak_bytes_in_use", "peak_bytes_in_use")):
+        v = stats.get(key)
+        if v is not None:
+            out[name] = float(v)
+    return out
+
+
+@contextlib.contextmanager
+def profile_trace(profile_dir: Optional[str]):
+    """A ``jax.profiler.trace`` window over the wrapped block.
+
+    No-op when ``profile_dir`` is falsy (the default path: launch CLIs
+    wrap their whole run in this unconditionally).  Spans opened inside
+    the window appear as TraceAnnotation regions in the captured trace
+    (obs/trace.py).  Failure to start the profiler — unsupported backend,
+    unwritable dir — degrades to running unprofiled rather than raising.
+    """
+    if not profile_dir:
+        yield
+        return
+    try:
+        import jax
+        jax.profiler.start_trace(profile_dir)
+        started = True
+    except Exception:
+        started = False
+    try:
+        yield
+    finally:
+        if started:
+            try:
+                jax.profiler.stop_trace()
+            except Exception:
+                pass
+
+
+def sample_into(recorder, prefix: str = "device") -> None:
+    """Drop current device-memory stats into ``recorder`` gauges
+    (``device_bytes_in_use``, ``device_peak_bytes_in_use``).  Cheap no-op
+    when metrics are off."""
+    if not getattr(recorder, "metrics_enabled", False):
+        return
+    for name, v in device_memory_stats().items():
+        recorder.gauge(f"{prefix}_{name}", v)

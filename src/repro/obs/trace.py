@@ -1,0 +1,141 @@
+"""Span-based tracer (repro.obs, DESIGN.md §12).
+
+Spans are host-side wall-clock intervals with nesting: entering a span
+pushes its name onto a thread-local stack, so a span opened inside another
+records under the joined path (``"engine_step/decode"``), and the closed
+span lands in the Recorder's ``span_ms`` histogram (labeled by path) plus —
+when a JSONL sink is attached — as one ``kind="span"`` record.
+
+**Async-dispatch contract.**  jax dispatches asynchronously: the Python
+call that launches a jitted step returns before the device finishes, so a
+naive ``perf_counter`` pair around it times the *dispatch*, not the work.
+A span therefore exposes :meth:`Span.sync`: pass it the step's output and
+it calls ``jax.block_until_ready`` **only when tracing is enabled** —
+instrumented loops stay fully async in production (the no-op span's
+``sync`` is identity, costs one attribute lookup, allocates nothing).
+
+When ``jax.profiler`` is importable, an enabled span also enters a
+``TraceAnnotation`` (``StepTraceAnnotation`` when ``step_num`` is given),
+so the same spans show up as named regions in a real profiler trace
+captured via ``obs/profile.py``'s ``--profile-dir`` window.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from typing import Dict, Optional
+
+_tls = threading.local()
+
+
+def _stack() -> list:
+    stack = getattr(_tls, "stack", None)
+    if stack is None:
+        stack = _tls.stack = []
+    return stack
+
+
+def current_path() -> str:
+    """The active span path ("" outside any span) — test/debug hook."""
+    return "/".join(_stack())
+
+
+class _NullSpan:
+    """The shared zero-cost span: returned for every ``span()`` call while
+    tracing is off.  A singleton so disabled instrumentation allocates
+    nothing per call (pinned by tests/test_obs.py)."""
+    __slots__ = ()
+
+    def __enter__(self) -> "_NullSpan":
+        return self
+
+    def __exit__(self, *exc) -> bool:
+        return False
+
+    @staticmethod
+    def sync(x):
+        return x
+
+
+NULL_SPAN = _NullSpan()
+
+
+def _profiler_annotation(name: str, step_num: Optional[int]):
+    """A jax.profiler annotation context for this span, or None when the
+    profiler API is unavailable (older jax, stripped builds)."""
+    try:
+        from jax import profiler
+        if step_num is not None and hasattr(profiler,
+                                            "StepTraceAnnotation"):
+            return profiler.StepTraceAnnotation(name, step_num=step_num)
+        if hasattr(profiler, "TraceAnnotation"):
+            return profiler.TraceAnnotation(name)
+    except ImportError:
+        pass
+    return None
+
+
+class Span:
+    """One enabled timed span; create via ``Recorder.span(name, ...)``."""
+    __slots__ = ("_recorder", "name", "labels", "step_num", "path",
+                 "_t0", "_annotation")
+
+    def __init__(self, recorder, name: str, labels: Dict[str, object],
+                 step_num: Optional[int] = None):
+        self._recorder = recorder
+        self.name = name
+        self.labels = labels
+        self.step_num = step_num
+        self.path = name
+        self._t0 = 0.0
+        self._annotation = None
+
+    def __enter__(self) -> "Span":
+        stack = _stack()
+        stack.append(self.name)
+        self.path = "/".join(stack)
+        self._annotation = _profiler_annotation(self.name, self.step_num)
+        if self._annotation is not None:
+            self._annotation.__enter__()
+        self._t0 = time.perf_counter()
+        return self
+
+    def sync(self, x):
+        """Block until ``x``'s device work is done (tracing is on, so the
+        span should time the computation, not the dispatch).  Returns
+        ``x`` so call sites can wrap the step expression in place."""
+        import jax
+        jax.block_until_ready(x)
+        return x
+
+    def __exit__(self, *exc) -> bool:
+        ms = (time.perf_counter() - self._t0) * 1e3
+        if self._annotation is not None:
+            self._annotation.__exit__(*exc)
+            self._annotation = None
+        stack = _stack()
+        if stack and stack[-1] == self.name:
+            stack.pop()
+        self._recorder._span_done(self.path, ms, self.labels,
+                                  self.step_num)
+        return False
+
+
+# -- module-level convenience ------------------------------------------------
+
+_default_recorder = None
+
+
+def set_default_recorder(recorder) -> None:
+    """Install the process-default Recorder :func:`span` binds to (None
+    disarms it).  The launch CLIs set this so library code can open spans
+    without threading the Recorder through every signature."""
+    global _default_recorder
+    _default_recorder = recorder
+
+
+def span(name: str, step_num: Optional[int] = None, **labels):
+    """A span on the process-default Recorder (no-op when none is set)."""
+    if _default_recorder is None:
+        return NULL_SPAN
+    return _default_recorder.span(name, step_num=step_num, **labels)

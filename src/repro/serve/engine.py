@@ -170,6 +170,11 @@ class ServeEngine:
         self.model = model
         self.params = params
         self.decoder = decoder
+        # Any telemetry shape adapts onto the bus: a Recorder passes
+        # through, a raw TelemetryWriter becomes its JSONL sink, None
+        # becomes the shared disabled Recorder (every obs call a no-op).
+        from repro.obs.metrics import as_recorder
+        self.obs = as_recorder(telemetry)
         self.telemetry = telemetry
         self.max_slots = max_slots
         self.max_seq_len = max_seq_len
@@ -260,8 +265,18 @@ class ServeEngine:
         batched decode over every active slot.  Returns the number of
         tokens generated this step."""
         sched = self.scheduler
-        sched.retire_finished()
+        obs = self.obs
+        retired = sched.retire_finished()
         admitted = sched.admit()
+        if retired:
+            obs.count("serve_retired", len(retired))
+        if admitted:
+            obs.count("serve_admitted", len(admitted))
+        # Admission-control save: slots are free but the queue head's cache
+        # footprint doesn't fit — without the can_cover gate this step
+        # would have raised OutOfBlocks mid-flight.
+        if sched.queued and len(sched.active) < self.max_slots:
+            obs.count("serve_outofblocks_averted")
         produced = 0
 
         # Batched prefill, grouped by prompt length (one compile per
@@ -276,9 +291,11 @@ class ServeEngine:
             for i, req in enumerate(group):
                 tokens[i] = req.prompt
                 tables[i] = self.cache.tables[req.slot]
-            nxt, self.pool = self._prefill_fn(
-                self.params, self.pool, jnp.asarray(tokens),
-                jnp.asarray(tables))
+            with obs.span("prefill", step_num=self.steps_run,
+                          prompt_len=S0, batch=tokens.shape[0]) as sp:
+                nxt, self.pool = sp.sync(self._prefill_fn(
+                    self.params, self.pool, jnp.asarray(tokens),
+                    jnp.asarray(tables)))
             nxt = np.asarray(nxt)
             for i, req in enumerate(group):
                 sched.mark_decoding(req, nxt[i])
@@ -296,20 +313,22 @@ class ServeEngine:
                 positions[req.slot] = req.decode_pos
             rep = (self.decoder.rep_state if self.decoder is not None
                    else {})
-            nxt, self.pool, new_rep, scores = self._decode_fn(
-                self.params, self.pool, jnp.asarray(tokens),
-                jnp.asarray(positions), self.cache.device_tables(), rep)
+            k = self.decoder.k if self.decoder is not None else 1
+            with obs.span("decode", step_num=self.steps_run,
+                          slots=len(decoding), k=k) as sp:
+                nxt, self.pool, new_rep, scores = sp.sync(self._decode_fn(
+                    self.params, self.pool, jnp.asarray(tokens),
+                    jnp.asarray(positions), self.cache.device_tables(),
+                    rep))
             nxt = np.asarray(nxt)
             for req in decoding:
                 sched.append_token(req, nxt[req.slot])
                 produced += 1
             if self.decoder is not None:
                 self.decoder.observe(new_rep, scores,
-                                     telemetry=self.telemetry,
+                                     telemetry=obs,
                                      step=self.steps_run)
-        if self.telemetry is not None:
-            self.telemetry.log(
-                "serve", self.steps_run, active=len(sched.active),
+        obs.log("serve", self.steps_run, active=len(sched.active),
                 queued=sched.queued, produced=produced,
                 free_blocks=self.cache.allocator.free_blocks)
         self.steps_run += 1

@@ -123,14 +123,27 @@ class RobustDecoder:
 
     def observe(self, new_state: dict, scores, telemetry=None,
                 step: int = 0) -> None:
-        """Adopt the post-step reputation state; mirror it to telemetry."""
+        """Adopt the post-step reputation state; mirror it to the bus
+        (per-step JSONL record + ejection/readmission counters on the
+        active-mask transition)."""
+        from repro.obs.metrics import as_recorder
+        rec = as_recorder(telemetry)
+        if rec.metrics_enabled:
+            import numpy as np
+            old = np.asarray(self.rep_state["active"])
+            new = np.asarray(new_state["active"])
+            ej = int(np.sum((old != 0) & (new == 0)))
+            readmit = int(np.sum((old == 0) & (new != 0)))
+            if ej:
+                rec.count("ejections", ej, stream="robust_decode")
+            if readmit:
+                rec.count("readmissions", readmit, stream="robust_decode")
         self.rep_state = new_state
-        if telemetry is not None:
-            telemetry.log("robust_decode", step,
-                          rule=self.rule_name, k=self.k, b=self.b,
-                          scores=scores,
-                          reputation=new_state["reputation"],
-                          active=new_state["active"])
+        rec.log("robust_decode", step,
+                rule=self.rule_name, k=self.k, b=self.b,
+                scores=scores,
+                reputation=new_state["reputation"],
+                active=new_state["active"])
 
     @property
     def active(self):

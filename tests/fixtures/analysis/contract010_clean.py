@@ -1,0 +1,27 @@
+"""Clean twin of contract010_violation.py: registered kinds and
+out-of-scope ``.log`` calls produce no findings."""
+import math
+
+
+def registered_kinds(tel, rec, step, loss):
+    tel.log("train", step, loss=loss)
+    rec.emit("serve", step, produced=3)
+    rec.log("robust_decode", step, rule="phocas")
+
+
+def not_the_bus(logger, x):
+    # stdlib logging: first positional arg is a level int, not a kind.
+    logger.log(10, "something happened %s", x)
+    # math.log is a module function, not an attribute .log(...) with a
+    # literal-str first arg + second positional.
+    return math.log(x, 2)
+
+
+def dynamic_kind(tel, kind, step):
+    # Non-literal kinds are runtime-checked by Recorder.emit, not here.
+    tel.log(kind, step, ok=True)
+
+
+def single_arg(printer):
+    # One positional argument: not the bus signature.
+    printer.log("hello")

@@ -50,7 +50,8 @@ def _found(findings):
 
 @pytest.mark.parametrize("stem", ["prng001", "prng002", "prng003",
                                   "axis001", "axis002",
-                                  "pallas001", "pallas002"])
+                                  "pallas001", "pallas002",
+                                  "contract010"])
 def test_ast_fixture_violations_exact(stem):
     path = _fx(f"{stem}_violation.py")
     with open(path) as fh:
@@ -60,7 +61,8 @@ def test_ast_fixture_violations_exact(stem):
 
 @pytest.mark.parametrize("stem", ["prng001", "prng002", "prng003",
                                   "prng004", "axis001", "axis002",
-                                  "pallas001", "pallas002"])
+                                  "pallas001", "pallas002",
+                                  "contract010"])
 def test_ast_fixture_clean_twins(stem):
     path = _fx(f"{stem}_clean.py")
     with open(path) as fh:

@@ -274,10 +274,21 @@ def test_telemetry_writer_roundtrip(tmp_path):
         tel.log("train", 0, loss=0.5, suspicion=jnp.array([0.0, 1.0]),
                 q_hat=jnp.int32(1), note="ok")
         tel.log("serve", 3, tok_s=123.4)
+        # non-finite floats must survive as strict JSON: NaN -> null,
+        # +/-inf -> the +/-1e308 clamp (a diverged loss would otherwise
+        # produce a line json.loads rejects in strict mode)
+        tel.log("train", 4, loss=float("nan"), grad_norm=float("inf"),
+                suspicion=jnp.array([0.5, jnp.inf]))
     recs = read_jsonl(path)
-    assert len(recs) == 2
+    assert len(recs) == 3
     assert recs[0]["kind"] == "train" and recs[0]["suspicion"] == [0.0, 1.0]
     assert recs[0]["q_hat"] == 1 and recs[1]["step"] == 3
+    assert recs[2]["loss"] is None
+    assert recs[2]["grad_norm"] == 1e308
+    assert recs[2]["suspicion"] == [0.5, 1e308]
+    with open(path) as fh:            # every line is strict JSON
+        for line in fh:
+            json.loads(line, parse_constant=lambda c: 1 / 0)
     # disabled writer is a no-op
     off = TelemetryWriter(None)
     off.log("train", 0, loss=1.0)
